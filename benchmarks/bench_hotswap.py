@@ -1,0 +1,75 @@
+"""Fig-7 reproduction: Voters can be hot-swapped at runtime via Decider
+policy entries on the AgentBus.
+
+One agent streams tasks (attacks injected at a 10% rate). Phase 1: no
+defense. Phase 2 (mid-stream): switch policy to first_voter + spin up the
+rule voter. Phase 3: switch to boolean_OR + spin up the model-based
+override voter. Reports utility / attack-success per phase window.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+from repro.core.acl import BusClient
+from repro.core.bus import MemoryBus
+from repro.core.voter import RuleVoter, StatVoter
+
+from .bench_voters import (TaskPlanner, env_handlers, make_corpus,
+                           rule_voter_rules, semantic_judge, run_case,
+                           SECRET, UNSAFE_KINDS)
+from repro.core.agent import LogActAgent
+
+
+def stream(corpus, phase_defense: str) -> Dict[str, float]:
+    """Run one window of the stream under the given defense; per-case
+    agents share nothing but the policy (the paper's single long-running
+    agent is modeled as its per-task turns)."""
+    util, att, n_b, n_a = 0.0, 0.0, 0, 0
+    for case in corpus:
+        r = run_case(case, phase_defense)
+        if case["attack"] is None:
+            util += r["utility"]; n_b += 1
+        else:
+            att += r["attack"]; n_a += 1
+    return {"utility": 100.0 * util / max(n_b, 1),
+            "asr": 100.0 * att / max(n_a, 1)}
+
+
+def make_stream_corpus(n: int, attack_rate: float = 0.1):
+    full = make_corpus(n_benign=n, n_attack=max(1, int(n * attack_rate)))
+    return full
+
+
+def main(rows: List[str]) -> None:
+    print("\n# Fig7: hot-swapping voters via Decider policy")
+    print(f"  {'phase':28s} {'utility%':>9s} {'attack%':>9s}")
+    phases = [
+        ("phase1 no defense", "target"),
+        ("phase2 +rule (first_voter)", "rule"),
+        ("phase3 +model (boolean_OR)", "dual"),
+    ]
+    for name, scheme in phases:
+        w = stream(make_stream_corpus(20), scheme)
+        print(f"  {name:28s} {w['utility']:9.1f} {w['asr']:9.1f}")
+        rows.append(f"hotswap.{scheme},0,"
+                    f"utility={w['utility']:.1f}_asr={w['asr']:.1f}")
+    # the swap itself: verify a LIVE agent's decider honors a mid-run
+    # policy change without restart
+    bus = MemoryBus()
+    case = make_corpus(1, 1)[1]  # an attack case
+    env: Dict[str, Any] = {}
+    planner = TaskPlanner(case, susceptible=True, infer_sleep=0.0)
+    agent = LogActAgent(bus=bus, planner=planner, env=env,
+                        handlers=env_handlers(case, env))
+    # live swap BEFORE the unsafe intent lands: add voter + change policy
+    agent.add_voter(RuleVoter(BusClient(bus, "rv", "voter"),
+                              rules=rule_voter_rules()))
+    agent.set_policy("decider", {"mode": "first_voter"})
+    agent.send_mail("Summarize item x")
+    agent.run_until_idle(max_rounds=10000)
+    assert not env.get("unsafe_executed"), "hot-swapped voter must block"
+    print("  [shape ok] live policy swap blocked the in-flight attack")
+
+
+if __name__ == "__main__":
+    main([])

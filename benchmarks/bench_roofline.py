@@ -1,0 +1,68 @@
+"""Roofline table: reads results/dryrun/*.json produced by
+``python -m repro.launch.dryrun`` and prints the per-(arch x shape x mesh)
+three-term roofline, the bottleneck, and HBM-fit info (§Roofline source)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(mesh: str = None, tag: str = "") -> List[Dict[str, Any]]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(p) as f:
+            c = json.load(f)
+        if c.get("tag", "") != tag:
+            continue
+        if mesh and c.get("mesh") != mesh:
+            continue
+        cells.append(c)
+    return cells
+
+
+def fmt_row(c: Dict[str, Any]) -> str:
+    if c["status"] != "ok":
+        return (f"  {c['arch']:18s} {c['shape']:12s} {c['mesh']:8s} "
+                f"{c['status']:>9s}  {c.get('reason', '')[:40]}")
+    r = c["roofline"]
+    mem = c.get("memory_analysis", {})
+    temp = (mem.get("temp_size_in_bytes") or 0) / 1e9
+    args = (mem.get("argument_size_in_bytes") or 0) / 1e9
+    return (f"  {c['arch']:18s} {c['shape']:12s} {c['mesh']:8s} "
+            f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+            f"{r['collective_s']:9.4f} {r['bottleneck']:>10s} "
+            f"{r['mfu']:6.3f} {r['useful_ratio']:6.3f} "
+            f"{args + temp:7.1f}GB {'fit' if c.get('fits_hbm') else 'OVER'}")
+
+
+def main(rows: List[str]) -> None:
+    print("\n# Roofline table (from dry-run artifacts; analytic cost model"
+          " calibrated vs unrolled XLA)")
+    header = (f"  {'arch':18s} {'shape':12s} {'mesh':8s} {'compute_s':>9s} "
+              f"{'memory_s':>9s} {'coll_s':>9s} {'bottleneck':>10s} "
+              f"{'mfu':>6s} {'useful':>6s} {'mem/dev':>9s}")
+    for mesh in ("16x16", "2x16x16"):
+        cells = load_cells(mesh)
+        if not cells:
+            continue
+        print(f"\n## mesh {mesh} ({'256' if mesh == '16x16' else '512'} chips)")
+        print(header)
+        for c in cells:
+            print(fmt_row(c))
+            if c["status"] == "ok":
+                r = c["roofline"]
+                rows.append(
+                    f"roofline.{c['arch']}.{c['shape']}.{mesh},"
+                    f"{r['step_time_s']*1e6:.0f},"
+                    f"mfu={r['mfu']:.3f}_bottleneck={r['bottleneck']}")
+    if not load_cells("16x16"):
+        print("  (no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first)")
+
+
+if __name__ == "__main__":
+    main([])

@@ -1,0 +1,123 @@
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> validate,
+on the three selected cells. Each iteration recompiles the cell on the
+production mesh and re-derives the roofline terms; results are written to
+results/dryrun/*.json with iteration tags and summarized here.
+
+Run: PYTHONPATH=src python -m benchmarks.perf_hillclimb
+(compiles ~15 configurations; several minutes on CPU)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def fmt(c) -> str:
+    r = c.get("roofline", {})
+    mem = c.get("memory_analysis", {})
+    tot = ((mem.get("temp_size_in_bytes") or 0)
+           + (mem.get("argument_size_in_bytes") or 0)) / 1e9
+    return (f"step={r.get('step_time_s', 0):8.4f}s "
+            f"mfu={r.get('mfu', 0):5.3f} "
+            f"[C={r.get('compute_s', 0):.4f} M={r.get('memory_s', 0):.4f} "
+            f"X={r.get('collective_s', 0):.4f}] "
+            f"bn={r.get('bottleneck', '-'):10s} mem/dev={tot:6.1f}GB "
+            f"{'fit' if c.get('fits_hbm') else 'OVER(mb=%s)' % c.get('suggested_microbatches', '?')}")
+
+
+def climb(run_cell, title, arch, shape, steps):
+    print(f"\n{'=' * 78}\n## {title}\n{'=' * 78}")
+    results = []
+    for tag, hypothesis, kw in steps:
+        c = run_cell(arch, shape, save=True, verbose=False, extra_tag=tag,
+                     **kw)
+        ok = c["status"] == "ok"
+        print(f"\n[{tag}] {hypothesis}")
+        print(f"   -> {'COMPILED ' + fmt(c) if ok else 'ERROR ' + c.get('error', '')[:120]}")
+        results.append((tag, c))
+    base = results[0][1]["roofline"]["step_time_s"]
+    best_tag, best = min(
+        ((t, c) for t, c in results if c["status"] == "ok"),
+        key=lambda tc: tc[1]["roofline"]["step_time_s"])
+    print(f"\n>> {arch}/{shape}: baseline {base:.4f}s -> best [{best_tag}] "
+          f"{best['roofline']['step_time_s']:.4f}s "
+          f"({base / best['roofline']['step_time_s']:.2f}x), "
+          f"mfu {results[0][1]['roofline']['mfu']:.3f} -> "
+          f"{best['roofline']['mfu']:.3f}")
+    return results
+
+
+def main() -> None:
+    from repro.launch.dryrun import run_cell
+
+    # ---------------- Cell 1: kimi train_4k (collective-bound flagship) ----
+    climb(run_cell, "Cell 1: kimi_k2_1t_a32b x train_4k (paper-technique "
+          "representative; collective-bound; HBM-over)",
+          "kimi_k2_1t_a32b", "train_4k", [
+        ("hc0_base", "baseline: remat=full, adamw, ZeRO-3, cf=1.25, 16x16",
+         dict()),
+        ("hc1_dots", "H1: remat=dots removes the remat all-gather pass "
+         "(AG 3->2 passes) and cuts recompute flops ~17%",
+         dict(remat="dots")),
+        ("hc2_int8", "H2: + int8+EF gradient compression cuts the grad "
+         "reduce-scatter 4x (paper-adjacent distributed-opt trick)",
+         dict(remat="dots", compress_grads=True)),
+        ("hc3_mp32", "H3: + re-factor mesh to (8 data x 32 model): FSDP AG "
+         "scales with (d-1) so d 16->8 halves it; TP-AR grows ~m^2/d but "
+         "stays smaller; predicted coll ~8e13 global",
+         dict(remat="dots", compress_grads=True, mesh_shape=(8, 32))),
+        ("hc4_cf10", "H4: + capacity_factor 1.25->1.0: expert flops and "
+         "dispatch a2a both shrink 20%",
+         dict(remat="dots", compress_grads=True, mesh_shape=(8, 32),
+              moe_cf=1.0)),
+        ("hc5_af_skip", "H5: + adafactor (HBM fit for 1T optimizer state) "
+         "+ Pallas flash kernel causal block-skip (attention flops /2)",
+         dict(remat="dots", compress_grads=True, mesh_shape=(8, 32),
+              moe_cf=1.0, opt_name="adafactor", attn_block_skip=True)),
+    ])
+
+    # ---------------- Cell 2: qwen3 prefill_32k (worst mfu) ----------------
+    climb(run_cell, "Cell 2: qwen3_4b x prefill_32k (worst roofline "
+          "fraction: attention-flops dominated at 32k)",
+          "qwen3_4b", "prefill_32k", [
+        ("hc0_base", "baseline: XLA chunked-softmax attention computes "
+         "every (q,kv) block (full S^2)", dict()),
+        ("hc1_skip", "H1: Pallas flash kernel skips fully-masked causal "
+         "blocks -> attention flops ~/2; attn is ~70% of fwd, predict "
+         "mfu 0.29->~0.44", dict(attn_block_skip=True)),
+        ("hc2_mp8", "H2: + TP 16->8 (d=64... batch 32 caps d; use d=32,m=8):"
+         " fewer TP all-reduce bytes per layer",
+         dict(attn_block_skip=True, mesh_shape=(32, 8))),
+    ])
+
+    # ---------------- Cell 3: mamba2 prefill_32k (collective-bound) --------
+    climb(run_cell, "Cell 3: mamba2_780m x prefill_32k (collective-bound: "
+          "a 0.78B model over-TP'd at 16-way)",
+          "mamba2_780m", "prefill_32k", [
+        ("hc0_base", "baseline: 16x16 mesh; 2 TP all-reduces/layer dominate "
+         "for a small model", dict()),
+        ("hc1_mp8", "H1: mesh (32 data x 8 model): TP-AR bytes/layer scale "
+         "with (m-1)/d: 15/16 -> 7/32, predict coll 0.045->~0.011s",
+         dict(mesh_shape=(32, 8))),
+        ("hc2_mp4", "H2: mesh (32 data x ... m=4 needs d=64 > batch 32; "
+         "try (32, 8) with seq-parallel activations instead",
+         dict(mesh_shape=(32, 8), seq_parallel=True)),
+    ])
+
+    # ---------------- Cell 4 (bonus): decode memory-bound cells ------------
+    climb(run_cell, "Cell 4 (beyond the required three): "
+          "codeqwen15_7b x decode_32k (memory-bound; HBM-over at bf16 KV)",
+          "codeqwen15_7b", "decode_32k", [
+        ("hc0_base", "baseline: bf16 KV cache = 2.2 TB global; memory term "
+         "dominated by cache reads; temp ~2.6x cache (update copies)",
+         dict()),
+        ("hc1_kvq", "H1: int8 KV quantization (per-token-head scales, "
+         "softmax err 4e-4 vs exact — tests/test_models.py): cache bytes "
+         "~/1.94 => memory term ~halves; temp drops with it",
+         dict(kv_quant=True)),
+    ])
+
+    print("\nhillclimb complete; tagged artifacts in results/dryrun/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper figure/table.
+
+  bench_overhead  -> Fig 5 (LogAct overhead: stages, log bytes, backends)
+  bench_voters    -> Fig 6 (Utility/ASR/latency/tokens per defense)
+  bench_hotswap   -> Fig 7 (hot-swapping voters via policy entries)
+  bench_recovery  -> Fig 8 (semantic recovery / health check / 290x fix)
+  bench_swarm     -> Fig 9 (supervisor swarm: +work, -tokens)
+  bench_roofline  -> framework roofline table from dry-run artifacts
+
+Prints a final ``name,us_per_call,derived`` CSV block.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (bench_hotswap, bench_overhead, bench_recovery, bench_roofline,
+               bench_swarm, bench_voters)
+
+BENCHES = [
+    ("overhead", bench_overhead.main),
+    ("voters", bench_voters.main),
+    ("hotswap", bench_hotswap.main),
+    ("recovery", bench_recovery.main),
+    ("swarm", bench_swarm.main),
+    ("roofline", bench_roofline.main),
+]
+
+
+def main() -> None:
+    rows: list = []
+    failures = []
+    for name, fn in BENCHES:
+        print(f"\n{'=' * 72}\n== bench_{name}\n{'=' * 72}")
+        t0 = time.monotonic()
+        try:
+            fn(rows)
+            print(f"-- bench_{name} done in {time.monotonic() - t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    print(f"\n{'=' * 72}\n== CSV (name,us_per_call,derived)\n{'=' * 72}")
+    for r in rows:
+        print(r)
+    if failures:
+        print(f"\nFAILED benches: {failures}")
+        sys.exit(1)
+    print(f"\nall {len(BENCHES)} benches passed; {len(rows)} CSV rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Qwen3-4B — qk-norm, GQA kv=8 [hf:Qwen/Qwen3-8B family; hf]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen3_4b", family="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8, d_ff=9728,
+    vocab=151936, d_head=128, qk_norm=True, rope_theta=1_000_000.0,
+    skip_shapes=("long_500k",),  # full attention
+)

@@ -1,0 +1,31 @@
+"""LogAct core: typed shared log (AgentBus) + deconstructed agent state
+machine (Driver / Voter / Decider / Executor), per the paper."""
+from . import entries
+from .acl import AclError, BusClient, Permissions, ROLES
+from .agent import LogActAgent
+from .bus import AgentBus, KvBus, MemoryBus, SqliteBus, make_bus
+from .decider import Decider
+from .driver import Driver, Planner, ScriptPlanner
+from .entries import Entry, Payload, PayloadType
+from .executor import Executor
+from .failover import ElasticWorkerPool, StandbyExecutor
+from .introspect import health_check, summarize_bus, trace_intents
+from .kernel import AgentKernel, AGENT_IMAGES, VOTER_LIBRARY, register_image
+from .policy import DeciderPolicy, PolicyState
+from .recovery import RecoveryPlanner, committed_unexecuted
+from .snapshot import DirSnapshotStore, MemorySnapshotStore, SnapshotStore
+from .supervisor import Supervisor
+from .voter import (RuleVoter, StatVoter, Voter, VoteDecision,
+                    STANDARD_RULES)
+
+__all__ = [
+    "entries", "AclError", "BusClient", "Permissions", "ROLES",
+    "LogActAgent", "AgentBus", "KvBus", "MemoryBus", "SqliteBus", "make_bus",
+    "Decider", "Driver", "Planner", "ScriptPlanner", "Entry", "Payload",
+    "PayloadType", "Executor", "health_check", "summarize_bus",
+    "trace_intents", "ElasticWorkerPool", "StandbyExecutor", "AgentKernel", "AGENT_IMAGES", "VOTER_LIBRARY",
+    "register_image", "DeciderPolicy", "PolicyState", "RecoveryPlanner",
+    "committed_unexecuted", "DirSnapshotStore", "MemorySnapshotStore",
+    "SnapshotStore", "Supervisor", "RuleVoter", "StatVoter", "Voter",
+    "VoteDecision", "STANDARD_RULES",
+]

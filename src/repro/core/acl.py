@@ -1,0 +1,94 @@
+"""Type-granular access control on the AgentBus (paper §3: "the API enforces
+access control at the granularity of types").
+
+A ``BusClient`` wraps an ``AgentBus`` with an identity and per-type
+``append`` / ``read`` / ``poll`` permission sets. This is the isolation
+mechanism that prevents the paper's Case-3 Byzantine Executor: an Executor
+credential simply cannot append ``Vote`` / ``Commit`` / ``Policy`` entries,
+so it cannot impersonate a Voter or Decider or rewire safety policy.
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence
+
+from .bus import AgentBus
+from .entries import ALL_TYPES, Entry, Payload, PayloadType
+
+
+class AclError(PermissionError):
+    pass
+
+
+def _ts(types: Iterable[PayloadType]) -> FrozenSet[PayloadType]:
+    return frozenset(PayloadType.parse(t) for t in types)
+
+
+class Permissions:
+    def __init__(self, append: Iterable[PayloadType] = (),
+                 read: Iterable[PayloadType] = ALL_TYPES,
+                 poll: Optional[Iterable[PayloadType]] = None) -> None:
+        self.append = _ts(append)
+        self.read = _ts(read)
+        self.poll = self.read if poll is None else _ts(poll)
+
+
+#: Standard component roles (paper Table 2).
+ROLES: Dict[str, Permissions] = {
+    "external": Permissions(append=[PayloadType.MAIL]),
+    "admin": Permissions(append=[PayloadType.MAIL, PayloadType.POLICY]),
+    "driver": Permissions(append=[PayloadType.INF_IN, PayloadType.INF_OUT,
+                                  PayloadType.INTENT, PayloadType.POLICY]),
+    "voter": Permissions(append=[PayloadType.VOTE]),
+    "decider": Permissions(append=[PayloadType.COMMIT, PayloadType.ABORT]),
+    # Executor: append Result + Mail (mail lets an agent's Executing stage
+    # message other agents' buses, paper §3); may NOT append votes/commits/
+    # policy. It may read only what it needs to play: commits + policy.
+    "executor": Permissions(
+        append=[PayloadType.RESULT, PayloadType.MAIL],
+        read=[PayloadType.INTENT, PayloadType.COMMIT, PayloadType.ABORT,
+              PayloadType.POLICY, PayloadType.RESULT]),
+    # Supervisors / recovery agents introspect everything but write only mail.
+    "supervisor": Permissions(append=[PayloadType.MAIL]),
+}
+
+
+class BusClient:
+    """An identity-scoped, ACL-enforcing handle on an AgentBus."""
+
+    def __init__(self, bus: AgentBus, client_id: str,
+                 role: str = "external",
+                 permissions: Optional[Permissions] = None) -> None:
+        if permissions is None:
+            if role not in ROLES:
+                raise AclError(f"unknown role {role!r}")
+            permissions = ROLES[role]
+        self.bus = bus
+        self.client_id = client_id
+        self.role = role
+        self.perms = permissions
+
+    # -- guarded API --------------------------------------------------------
+    def append(self, payload: Payload) -> int:
+        if payload.type not in self.perms.append:
+            raise AclError(
+                f"{self.client_id} (role={self.role}) may not append "
+                f"{payload.type.value}")
+        return self.bus.append(payload)
+
+    def read(self, start: int, end: Optional[int] = None) -> List[Entry]:
+        return [e for e in self.bus.read(start, end)
+                if e.type in self.perms.read]
+
+    def tail(self) -> int:
+        return self.bus.tail()
+
+    def poll(self, start: int, filter: Sequence[PayloadType],
+             timeout: Optional[float] = None) -> List[Entry]:
+        fs = _ts(filter)
+        denied = fs - self.perms.poll
+        if denied:
+            raise AclError(
+                f"{self.client_id} (role={self.role}) may not poll "
+                f"{sorted(t.value for t in denied)}")
+        return self.bus.poll(start, sorted(fs, key=lambda t: t.value),
+                             timeout=timeout)

@@ -1,0 +1,155 @@
+"""LogActAgent: assembly of the deconstructed state machine over one bus.
+
+Two execution modes:
+
+* **Synchronous** (``tick`` / ``run_until_idle``): a deterministic scheduler
+  that repeatedly lets every component play newly appended entries, in log
+  order. Used by tests and benchmarks — the state machine semantics are
+  identical to threaded mode because all coordination flows through the
+  log, never through shared memory.
+
+* **Threaded** (``start`` / ``stop``): each component runs its own
+  poll-loop thread, as deconstructed physical processes would. This is the
+  deployment-shaped mode (the AgentKernel's Spawn mode uses it).
+
+Components never talk to each other directly; the only channel is the bus,
+so collocated vs. isolated placement is purely a deployment choice
+(paper §3: "these deconstructed components can be collocated, or isolated
+on different physical processes or machines").
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from . import entries as E
+from .acl import BusClient
+from .bus import AgentBus, MemoryBus
+from .decider import Decider
+from .driver import Driver, Planner
+from .executor import Executor, Handler
+from .snapshot import MemorySnapshotStore, SnapshotStore
+from .voter import Voter
+
+
+class LogActAgent:
+    def __init__(self, bus: Optional[AgentBus] = None,
+                 planner: Optional[Planner] = None,
+                 env: Any = None,
+                 handlers: Optional[Dict[str, Handler]] = None,
+                 voters: Sequence[Voter] = (),
+                 snapshot_store: Optional[SnapshotStore] = None,
+                 agent_id: str = "agent",
+                 executor_announce_reboot: bool = False,
+                 with_driver: bool = True):
+        self.bus = bus if bus is not None else MemoryBus()
+        self.agent_id = agent_id
+        self.snapshots = snapshot_store or MemorySnapshotStore()
+        self.driver: Optional[Driver] = None
+        if with_driver:
+            assert planner is not None
+            self.driver = Driver(
+                BusClient(self.bus, f"{agent_id}-driver", "driver"), planner)
+        self.voters: List[Voter] = list(voters)
+        self.decider = Decider(
+            BusClient(self.bus, f"{agent_id}-decider", "decider"))
+        self.executor = Executor(
+            BusClient(self.bus, f"{agent_id}-executor", "executor"),
+            env=env, handlers=handlers,
+            announce_reboot=executor_announce_reboot)
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+
+    # -- external interaction ------------------------------------------------
+    def external_client(self, client_id: str = "user",
+                        role: str = "external") -> BusClient:
+        return BusClient(self.bus, client_id, role)
+
+    def send_mail(self, text: str, sender: str = "user", **extra) -> int:
+        return self.external_client(sender).append(E.mail(text, sender, **extra))
+
+    def set_policy(self, scope: str, body: Dict[str, Any]) -> int:
+        return self.external_client("admin", "admin").append(
+            E.policy(scope, body))
+
+    def add_voter(self, voter: Voter, from_tail: bool = True) -> None:
+        """Hot-plug a voter (paper Fig. 7). With ``from_tail`` the voter only
+        votes on intents after its arrival (it still replays policy via its
+        own cursor=0 scan first, to learn current policy)."""
+        if from_tail:
+            # Learn policy + fencing from history, but don't vote on old
+            # intents: play history with voting suppressed.
+            decide = voter.decide
+            voter.decide = lambda e: None  # type: ignore[assignment]
+            voter.play_available()
+            voter.decide = decide  # type: ignore[assignment]
+        self.voters.append(voter)
+        if self._threads:  # threaded mode: spin up a thread for it
+            self._spawn(voter.play_available)
+
+    # -- synchronous deterministic scheduler ---------------------------------
+    def _components(self) -> List[Any]:
+        comps: List[Any] = []
+        if self.driver is not None:
+            comps.append(self.driver)
+        comps.extend(self.voters)
+        comps.extend([self.decider, self.executor])
+        return comps
+
+    def tick(self) -> int:
+        """One scheduler round: every component plays what's available.
+        Returns total entries played across components."""
+        return sum(c.play_available() for c in self._components())
+
+    def run_until_idle(self, max_rounds: int = 10_000) -> None:
+        for _ in range(max_rounds):
+            played = self.tick()
+            if played == 0 and (self.driver is None or self.driver.idle):
+                return
+            if played == 0:
+                # Nothing to play but driver not idle => waiting on something
+                # that will never arrive in sync mode (e.g. external mail).
+                return
+        raise RuntimeError("run_until_idle: exceeded max_rounds")
+
+    # -- snapshots ------------------------------------------------------------
+    def snapshot(self) -> None:
+        if self.driver is not None:
+            self.snapshots.put(f"{self.agent_id}-driver",
+                               self.driver.cursor, self.driver.to_snapshot())
+        self.snapshots.put(f"{self.agent_id}-decider",
+                           self.decider.cursor, self.decider.to_snapshot())
+
+    # -- threaded mode ---------------------------------------------------------
+    def _spawn(self, play: Callable[[], int]) -> None:
+        def loop() -> None:
+            while not self._stop.is_set():
+                if play() == 0:
+                    time.sleep(0.002)
+        t = threading.Thread(target=loop, daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def start(self) -> None:
+        self._stop.clear()
+        for c in self._components():
+            self._spawn(c.play_available)
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=2.0)
+        self._threads = []
+
+    def wait_idle(self, timeout: float = 30.0) -> bool:
+        """Threaded mode: wait until the driver is done and log playback has
+        caught up."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            tail = self.bus.tail()
+            caught_up = all(c.cursor >= tail for c in self._components())
+            if caught_up and (self.driver is None or self.driver.idle):
+                return True
+            time.sleep(0.005)
+        return False

@@ -1,0 +1,274 @@
+"""The AgentBus: a linearizable, durable, typed shared log (paper §3, §4.1).
+
+API (paper Fig. 4): ``append(payload) -> position``, ``read(start, end)``,
+``tail()``, and the blocking ``poll(start, filter) -> entries``.
+
+Three backends (paper §4.1):
+
+* ``MemoryBus``     — in-process, no durability; fastest.
+* ``SqliteBus``     — one row per entry; durable across reboots of the node.
+* ``KvBus``         — one object per entry over a file-per-key store,
+                      emulating a remote disaggregated KV store (the paper's
+                      DynamoDB / "AnonDB" variant); optional injected
+                      round-trip latency for the Fig-5 backend sweep.
+
+All backends are linearizable for ``append`` (single atomic position
+assignment) and support concurrent appenders/readers from multiple threads.
+``SqliteBus``/``KvBus`` additionally support multiple *processes* (positions
+are assigned transactionally / via atomic file creation).
+"""
+from __future__ import annotations
+
+import os
+import sqlite3
+import threading
+import time
+from typing import Iterable, List, Optional, Sequence
+
+from .entries import ALL_TYPES, Entry, Payload, PayloadType
+
+
+class AgentBus:
+    """Abstract AgentBus. Subclasses implement the four storage methods."""
+
+    def append(self, payload: Payload) -> int:
+        raise NotImplementedError
+
+    def read(self, start: int, end: Optional[int] = None) -> List[Entry]:
+        raise NotImplementedError
+
+    def tail(self) -> int:
+        """Position one past the last entry (0 for an empty log)."""
+        raise NotImplementedError
+
+    def poll(self, start: int, filter: Sequence[PayloadType] = ALL_TYPES,
+             timeout: Optional[float] = None) -> List[Entry]:
+        """Block until >=1 entry with type in ``filter`` exists at
+        position >= ``start``; return all such entries in [start, tail).
+
+        Returns [] on timeout. Default implementation: condition-wait if the
+        backend supports in-process notification, else bounded spin.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        fs = set(PayloadType.parse(t) for t in filter)
+        while True:
+            entries = [e for e in self.read(start) if e.type in fs]
+            if entries:
+                return entries
+            remaining = None if deadline is None else deadline - time.monotonic()
+            if remaining is not None and remaining <= 0:
+                return []
+            if not self._wait_for_append(self.tail(), remaining):
+                if deadline is not None and time.monotonic() >= deadline:
+                    return []
+
+    # -- helpers -----------------------------------------------------------
+    def _wait_for_append(self, known_tail: int,
+                         timeout: Optional[float]) -> bool:
+        """Wait until tail() > known_tail. Returns True if it advanced."""
+        raise NotImplementedError
+
+    def read_type(self, *types: PayloadType, start: int = 0) -> List[Entry]:
+        ts = set(types)
+        return [e for e in self.read(start) if e.type in ts]
+
+    def close(self) -> None:  # pragma: no cover - backend-specific
+        pass
+
+
+# ---------------------------------------------------------------------------
+# In-memory backend
+# ---------------------------------------------------------------------------
+
+class MemoryBus(AgentBus):
+    def __init__(self) -> None:
+        self._entries: List[Entry] = []
+        self._cond = threading.Condition()
+
+    def append(self, payload: Payload) -> int:
+        with self._cond:
+            pos = len(self._entries)
+            self._entries.append(Entry(pos, time.time(), payload))
+            self._cond.notify_all()
+            return pos
+
+    def read(self, start: int, end: Optional[int] = None) -> List[Entry]:
+        with self._cond:
+            end = len(self._entries) if end is None else min(end, len(self._entries))
+            return list(self._entries[max(0, start):end])
+
+    def tail(self) -> int:
+        with self._cond:
+            return len(self._entries)
+
+    def _wait_for_append(self, known_tail: int, timeout: Optional[float]) -> bool:
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: len(self._entries) > known_tail, timeout=timeout)
+
+
+# ---------------------------------------------------------------------------
+# SQLite backend
+# ---------------------------------------------------------------------------
+
+class SqliteBus(AgentBus):
+    """Durable bus: one row per entry. Safe for multi-thread/multi-process use
+    (WAL journal mode; position assignment is transactional)."""
+
+    _POLL_INTERVAL = 0.005
+
+    def __init__(self, path: str) -> None:
+        self._path = path
+        self._local = threading.local()
+        conn = self._conn()
+        conn.execute("PRAGMA journal_mode=WAL")
+        conn.execute(
+            "CREATE TABLE IF NOT EXISTS log ("
+            " position INTEGER PRIMARY KEY,"
+            " realtime_ts REAL NOT NULL,"
+            " type TEXT NOT NULL,"
+            " payload TEXT NOT NULL)")
+        conn.execute("CREATE INDEX IF NOT EXISTS idx_type ON log(type)")
+        conn.commit()
+
+    def _conn(self) -> sqlite3.Connection:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = sqlite3.connect(self._path, timeout=30.0)
+            self._local.conn = conn
+        return conn
+
+    def append(self, payload: Payload) -> int:
+        conn = self._conn()
+        ts = time.time()
+        with conn:  # transaction => linearizable position assignment
+            cur = conn.execute(
+                "INSERT INTO log(position, realtime_ts, type, payload) "
+                "VALUES ((SELECT COALESCE(MAX(position)+1, 0) FROM log), ?, ?, ?)",
+                (ts, payload.type.value, payload.to_json()))
+            return cur.lastrowid
+
+    def read(self, start: int, end: Optional[int] = None) -> List[Entry]:
+        conn = self._conn()
+        if end is None:
+            rows = conn.execute(
+                "SELECT position, realtime_ts, payload FROM log "
+                "WHERE position >= ? ORDER BY position", (start,)).fetchall()
+        else:
+            rows = conn.execute(
+                "SELECT position, realtime_ts, payload FROM log "
+                "WHERE position >= ? AND position < ? ORDER BY position",
+                (start, end)).fetchall()
+        return [Entry(p, ts, Payload.from_json(pl)) for p, ts, pl in rows]
+
+    def tail(self) -> int:
+        row = self._conn().execute(
+            "SELECT COALESCE(MAX(position)+1, 0) FROM log").fetchone()
+        return int(row[0])
+
+    def _wait_for_append(self, known_tail: int, timeout: Optional[float]) -> bool:
+        wait = self._POLL_INTERVAL if timeout is None else min(
+            self._POLL_INTERVAL, max(timeout, 0.0))
+        time.sleep(wait)
+        return self.tail() > known_tail
+
+    def close(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            conn.close()
+            self._local.conn = None
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated KV backend ("AnonDB" emulation)
+# ---------------------------------------------------------------------------
+
+class KvBus(AgentBus):
+    """Entry-per-object over a directory, emulating a remote KV/object store.
+
+    Position assignment uses atomic O_CREAT|O_EXCL file creation (compare-
+    and-set on the key ``entry-<pos>``) so multiple processes can append
+    concurrently and linearizably. ``latency_s`` injects a synthetic
+    round-trip per operation, for the geo-distributed-backend sweep
+    (paper Fig. 5 bottom).
+    """
+
+    _POLL_INTERVAL = 0.005
+
+    def __init__(self, root: str, latency_s: float = 0.0,
+                 fsync: bool = False) -> None:
+        self._root = root
+        self._latency = latency_s
+        self._fsync = fsync
+        os.makedirs(root, exist_ok=True)
+        self._tail_hint = 0
+
+    def _key(self, pos: int) -> str:
+        return os.path.join(self._root, f"entry-{pos:012d}.json")
+
+    def _rtt(self) -> None:
+        if self._latency > 0:
+            time.sleep(self._latency)
+
+    def append(self, payload: Payload) -> int:
+        self._rtt()
+        pos = self.tail()
+        while True:
+            data = Entry(pos, time.time(), payload).to_json().encode()
+            try:
+                fd = os.open(self._key(pos), os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                pos += 1  # lost the CAS race; retry at the next slot
+                continue
+            try:
+                os.write(fd, data)
+                if self._fsync:
+                    os.fsync(fd)
+            finally:
+                os.close(fd)
+            self._tail_hint = max(self._tail_hint, pos + 1)
+            return pos
+
+    def read(self, start: int, end: Optional[int] = None) -> List[Entry]:
+        self._rtt()
+        out: List[Entry] = []
+        pos = max(0, start)
+        while end is None or pos < end:
+            key = self._key(pos)
+            try:
+                with open(key, "rb") as f:
+                    data = f.read()
+            except FileNotFoundError:
+                break
+            if not data:  # writer created but hasn't written yet; stop here
+                break
+            out.append(Entry.from_json(data.decode()))
+            pos += 1
+        return out
+
+    def tail(self) -> int:
+        pos = self._tail_hint
+        while os.path.exists(self._key(pos)):
+            pos += 1
+        self._tail_hint = pos
+        return pos
+
+    def _wait_for_append(self, known_tail: int, timeout: Optional[float]) -> bool:
+        wait = self._POLL_INTERVAL if timeout is None else min(
+            self._POLL_INTERVAL, max(timeout, 0.0))
+        time.sleep(wait)
+        return self.tail() > known_tail
+
+
+def make_bus(backend: str = "memory", path: Optional[str] = None,
+             **kw) -> AgentBus:
+    """Factory. backend in {'memory', 'sqlite', 'kv'}."""
+    if backend == "memory":
+        return MemoryBus()
+    if backend == "sqlite":
+        assert path, "sqlite backend needs a path"
+        return SqliteBus(path)
+    if backend == "kv":
+        assert path, "kv backend needs a root directory"
+        return KvBus(path, **kw)
+    raise ValueError(f"unknown bus backend: {backend}")

@@ -1,0 +1,148 @@
+"""The Decider: plays Intent + Vote + Policy, appends Commit / Abort.
+
+The Decider is a classical replicated state machine (paper §3.2): its state
+is compact (current DeciderPolicy + in-flight intent bookkeeping), decisions
+are a deterministic function of the log prefix, and therefore **two Deciders
+can safely coexist** — they append identical decisions redundantly and
+downstream components dedupe by intent_id.
+
+Quorum policies (paper §3, "Policy"):
+  on_by_default  commit immediately, no votes required
+  first_voter    the first vote on an intent decides it
+  boolean_OR     commit on the first approval from any listed voter type;
+                 abort once every listed type has voted and none approved
+  boolean_AND    abort on the first rejection; commit once every listed
+                 type has approved
+  quorum_k       commit at k approvals; abort at k rejections
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Set
+
+from . import entries as E
+from .acl import BusClient
+from .entries import Entry, PayloadType
+from .policy import PolicyState
+
+
+class Decider:
+    def __init__(self, client: BusClient, decider_id: Optional[str] = None):
+        self.client = client
+        self.decider_id = decider_id or f"decider-{E.new_id()}"
+        self.cursor = 0
+        self.policy = PolicyState()
+        # intent_id -> {voter_type -> approve}; only for undecided intents
+        self.pending: Dict[str, Dict[str, bool]] = {}
+        # intent_id -> policy snapshot at intent time (decisions must use the
+        # policy in force when the intent was logged, for determinism across
+        # Deciders that play the log at different speeds)
+        self.intent_policy: Dict[str, Any] = {}
+        self.decided: Set[str] = set()
+
+    # -- snapshot (classical RSM recovery, §3.2) ----------------------------
+    def to_snapshot(self) -> Dict[str, Any]:
+        return {"cursor": self.cursor,
+                "policy": {"mode": self.policy.decider.mode,
+                           "voter_types": list(self.policy.decider.voter_types),
+                           "k": self.policy.decider.k},
+                "elected_driver": self.policy.elected_driver,
+                "driver_epoch": self.policy.driver_epoch,
+                "pending": self.pending,
+                "intent_policy": self.intent_policy,
+                "decided": sorted(self.decided)}
+
+    def restore_snapshot(self, snap: Dict[str, Any]) -> None:
+        from .policy import DeciderPolicy
+        self.cursor = snap["cursor"]
+        self.policy.decider = DeciderPolicy.from_body(snap["policy"])
+        self.policy.elected_driver = snap["elected_driver"]
+        self.policy.driver_epoch = snap["driver_epoch"]
+        self.pending = {k: dict(v) for k, v in snap["pending"].items()}
+        self.intent_policy = dict(snap["intent_policy"])
+        self.decided = set(snap["decided"])
+
+    # -- transitions ---------------------------------------------------------
+    def handle(self, entry: Entry) -> None:
+        if entry.type == PayloadType.POLICY:
+            self.policy.apply(entry)
+        elif entry.type == PayloadType.INTENT:
+            self._on_intent(entry)
+        elif entry.type == PayloadType.VOTE:
+            self._on_vote(entry)
+
+    def _on_intent(self, entry: Entry) -> None:
+        body = entry.body
+        iid = body["intent_id"]
+        if iid in self.decided or iid in self.pending:
+            return
+        if not self.policy.driver_is_current(body.get("driver_id")):
+            return  # fenced driver (paper §3.2): never decide its intents
+        pol = self.policy.decider
+        self.intent_policy[iid] = {"mode": pol.mode,
+                                   "voter_types": list(pol.voter_types),
+                                   "k": pol.k}
+        if pol.mode == "on_by_default":
+            self._commit(iid)
+        else:
+            self.pending[iid] = {}
+
+    def _on_vote(self, entry: Entry) -> None:
+        body = entry.body
+        iid = body["intent_id"]
+        if iid in self.decided or iid not in self.pending:
+            return
+        votes = self.pending[iid]
+        vt = body["voter_type"]
+        if vt in votes:
+            return  # one vote per type counts (paper §3.2, Voter recovery)
+        votes[vt] = bool(body["approve"])
+        self._maybe_decide(iid)
+
+    def _maybe_decide(self, iid: str) -> None:
+        from .policy import DeciderPolicy
+        pol = DeciderPolicy.from_body(self.intent_policy[iid])
+        votes = self.pending[iid]
+        mode = pol.mode
+        types = list(pol.voter_types) or list(votes.keys())
+        if mode == "first_voter":
+            if votes:
+                first = next(iter(votes.values()))
+                self._commit(iid) if first else self._abort(iid, "first voter rejected")
+        elif mode == "boolean_OR":
+            if any(votes.get(t) for t in types):
+                self._commit(iid)
+            elif all(t in votes for t in pol.voter_types) and pol.voter_types:
+                self._abort(iid, "all voters rejected")
+        elif mode == "boolean_AND":
+            if any(votes.get(t) is False for t in types):
+                self._abort(iid, "a voter rejected")
+            elif pol.voter_types and all(votes.get(t) for t in pol.voter_types):
+                self._commit(iid)
+        elif mode == "quorum_k":
+            approvals = sum(1 for v in votes.values() if v)
+            rejections = sum(1 for v in votes.values() if not v)
+            if approvals >= pol.k:
+                self._commit(iid)
+            elif rejections >= pol.k:
+                self._abort(iid, f"{rejections} rejections")
+
+    def _commit(self, iid: str) -> None:
+        self.decided.add(iid)
+        self.pending.pop(iid, None)
+        self.intent_policy.pop(iid, None)
+        self.client.append(E.commit(iid, self.decider_id))
+
+    def _abort(self, iid: str, reason: str) -> None:
+        self.decided.add(iid)
+        self.pending.pop(iid, None)
+        self.intent_policy.pop(iid, None)
+        self.client.append(E.abort(iid, self.decider_id, reason))
+
+    def play_available(self) -> int:
+        tail = self.client.tail()
+        played = self.client.read(self.cursor, tail)
+        for e in played:
+            self.handle(e)
+        # advance over ACL-filtered (invisible) entries too
+        self.cursor = max(self.cursor, tail)
+        return len(played)

@@ -1,0 +1,224 @@
+"""The Driver: runs the Inferring stage (paper §3, Fig. 2/3).
+
+The Driver plays ``Mail`` / ``Result`` / ``Abort`` (plus ``Policy``), invokes
+the *inference layer* (here: a pluggable ``Planner``), appends an ``InfIn``
+and an ``InfOut``, and extracts an ``Intent``. Key properties from §3.2:
+
+* **Deterministic replay**: because every planner output is logged as
+  ``InfOut``, a recovering Driver replays the log and *reuses logged
+  outputs* instead of re-invoking the (non-deterministic) planner.
+* **Fencing**: a booting Driver's first action is to append a driver
+  election policy entry at ``epoch = last_epoch + 1``; a Driver that
+  observes a higher-epoch election for someone else powers itself down.
+* **Quiescence / mail buffering**: mail arriving while an intention is in
+  flight is buffered and included in the next inference call.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+from . import entries as E
+from .acl import BusClient
+from .entries import Entry, PayloadType
+from .policy import PolicyState
+
+
+class Planner:
+    """The inference layer. ``propose`` may be arbitrary / non-deterministic;
+    its output is logged (InfOut) so Driver replay is deterministic."""
+
+    def propose(self, context: Dict[str, Any]) -> Dict[str, Any]:
+        """Return a plan: {"intent": {"kind":..., "args":...}} or
+        {"done": True, "note": ...}."""
+        raise NotImplementedError
+
+
+class ScriptPlanner(Planner):
+    """Replays a fixed list of intents; handy for tests and benchmarks."""
+
+    def __init__(self, plans: List[Dict[str, Any]]):
+        self.plans = list(plans)
+        self.i = 0
+
+    def propose(self, context: Dict[str, Any]) -> Dict[str, Any]:
+        if self.i >= len(self.plans):
+            return {"done": True, "note": "script exhausted"}
+        p = self.plans[self.i]
+        self.i += 1
+        return p
+
+
+class Driver:
+    def __init__(self, client: BusClient, planner: Planner,
+                 driver_id: Optional[str] = None, elect: bool = True):
+        self.client = client
+        self.planner = planner
+        self.driver_id = driver_id or f"driver-{E.new_id()}"
+        self.cursor = 0
+        self.policy = PolicyState()
+        self.fenced = False
+        self.done = False
+        self.inflight_intent: Optional[str] = None
+        self.mail_buffer: List[Dict[str, Any]] = []
+        self.history: List[Dict[str, Any]] = []  # conversation history
+        self.n_inferences = 0  # how many InfOuts this lineage has produced
+        self.n_intents = 0     # how many Intents this lineage has issued
+        self._logged_infouts: List[Dict[str, Any]] = []  # for replay
+        self._logged_intents: List[Dict[str, Any]] = []  # for replay
+        self._infout_scan = 0  # log position up to which we've harvested
+        self._elect_requested = elect
+        self._elected = False
+        self.inference_latency_s = 0.0
+
+    # -- election / fencing --------------------------------------------------
+    def _ensure_elected(self) -> None:
+        if self._elected or not self._elect_requested:
+            return
+        # Learn every election already on the log before picking an epoch,
+        # so a booting driver always out-epochs the incumbent (§3.2).
+        for e in self.client.read(0):
+            if e.type == PayloadType.POLICY:
+                self.policy.apply(e)
+        epoch = self.policy.driver_epoch + 1
+        self.client.append(E.driver_election(self.driver_id, epoch))
+        self.policy.driver_epoch = epoch
+        self.policy.elected_driver = self.driver_id
+        self._elected = True
+
+    # -- snapshot (classical RSM; conversation history is the state) --------
+    def to_snapshot(self) -> Dict[str, Any]:
+        return {"cursor": self.cursor, "history": self.history,
+                "n_inferences": self.n_inferences, "n_intents": self.n_intents,
+                "inflight_intent": self.inflight_intent,
+                "mail_buffer": self.mail_buffer, "done": self.done}
+
+    def restore_snapshot(self, snap: Dict[str, Any]) -> None:
+        self.cursor = snap["cursor"]
+        self.history = list(snap["history"])
+        self.n_inferences = snap["n_inferences"]
+        self.n_intents = snap.get("n_intents", snap["n_inferences"])
+        self.inflight_intent = snap["inflight_intent"]
+        self.mail_buffer = list(snap["mail_buffer"])
+        self.done = snap["done"]
+
+    # -- transitions ---------------------------------------------------------
+    def handle(self, entry: Entry) -> None:
+        if self.fenced:
+            return
+        t = entry.type
+        # Drain buffered mail before processing any non-mail entry, so
+        # consecutive mail batches into one inference but log order is
+        # otherwise preserved (crucial for deterministic replay).
+        if (t != PayloadType.MAIL and self.mail_buffer
+                and self.inflight_intent is None):
+            self._infer()
+        if t == PayloadType.POLICY:
+            self.policy.apply(entry)
+            if (self.policy.elected_driver is not None
+                    and self.policy.elected_driver != self.driver_id
+                    and self._elected):
+                self.fenced = True  # lost the election: power down (§3.2)
+            return
+        if t == PayloadType.MAIL:
+            # Buffer only; play_available() triggers inference once the
+            # currently-available entries are drained, so mail that arrived
+            # together is batched into one inference call (paper §3).
+            self.mail_buffer.append(dict(entry.body))
+            self.done = False  # new instructions can wake a finished driver
+            return
+        if t == PayloadType.RESULT:
+            body = entry.body
+            if body.get("recovered"):
+                # Special executor-reboot entry (§3.2): treat as a wake-up
+                # regardless of in-flight bookkeeping — the old executor is
+                # gone, so the in-flight intention will never produce a
+                # normal result.
+                self.history.append({"role": "result", "body": body})
+                self.inflight_intent = None
+                self._infer(recovering=True)
+                return
+            if body.get("intent_id") == self.inflight_intent:
+                self.history.append({"role": "result", "body": body})
+                self.inflight_intent = None
+                if not self.done:
+                    self._infer()
+            return
+        if t == PayloadType.ABORT:
+            if entry.body.get("intent_id") == self.inflight_intent:
+                self.history.append({"role": "abort", "body": entry.body})
+                self.inflight_intent = None
+                if not self.done:
+                    self._infer()
+
+    def _context(self, recovering: bool) -> Dict[str, Any]:
+        ctx = {"history": self.history[-128:],
+               "mail": self.mail_buffer, "recovering": recovering}
+        return ctx
+
+    def _infer(self, recovering: bool = False) -> None:
+        self._ensure_elected()
+        if self.fenced:
+            return
+        ctx = self._context(recovering)
+        # Deterministic replay (§3.2): harvest this lineage's logged InfOuts
+        # and Intents from the bus; reuse logged output #n if it already
+        # exists. The planner is only invoked — and InfIn/InfOut/Intent only
+        # appended — for genuinely new inferences, so replaying a recovered
+        # Driver is a pure read of the log.
+        for e in self.client.read(self._infout_scan):
+            if e.body.get("driver_id") != self.driver_id:
+                continue
+            if e.type == PayloadType.INF_OUT:
+                self._logged_infouts.append(e.body["plan"])
+            elif e.type == PayloadType.INTENT:
+                self._logged_intents.append(dict(e.body))
+        self._infout_scan = self.client.tail()
+        replaying = self.n_inferences < len(self._logged_infouts)
+        if replaying:
+            plan = self._logged_infouts[self.n_inferences]
+        else:
+            self.client.append(E.inf_in(ctx, self.driver_id))
+            t0 = time.monotonic()
+            plan = self.planner.propose(ctx)
+            self.inference_latency_s += time.monotonic() - t0
+            self.client.append(E.inf_out(plan, self.driver_id))
+            self._logged_infouts.append(plan)
+            self._infout_scan = self.client.tail()
+        self.n_inferences += 1
+        self.history.extend({"role": "mail", "body": m}
+                            for m in self.mail_buffer)
+        self.mail_buffer = []
+        if plan.get("done"):
+            self.done = True
+            return
+        it = plan["intent"]
+        if self.n_intents < len(self._logged_intents):
+            body = self._logged_intents[self.n_intents]  # replay: no append
+        else:
+            # Deterministic lineage-scoped intent identity, so a replayed
+            # Driver regenerates identical ids (dedup across recovery).
+            pay = E.intent(it["kind"], it.get("args", {}), self.driver_id,
+                           intent_id=it.get("intent_id")
+                           or f"{self.driver_id}-i{self.n_intents}")
+            body = pay.body
+            self.client.append(pay)
+        self.n_intents += 1
+        self.history.append({"role": "intent", "body": body})
+        self.inflight_intent = body["intent_id"]
+
+    def play_available(self) -> int:
+        tail = self.client.tail()
+        played = self.client.read(self.cursor, tail)
+        for e in played:
+            self.handle(e)
+        self.cursor = max(self.cursor, tail)
+        if (self.mail_buffer and self.inflight_intent is None
+                and not self.fenced):
+            self._infer()
+        return len(played)
+
+    @property
+    def idle(self) -> bool:
+        return (self.done or self.fenced) and self.inflight_intent is None \
+            and not self.mail_buffer

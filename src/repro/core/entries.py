@@ -1,0 +1,168 @@
+"""Typed entries for the AgentBus (paper Fig. 4 / Table 2).
+
+Every record on the bus is an ``Entry``: a log position (assigned by the
+bus at append time), a wall-clock timestamp, and a typed ``Payload``.
+Payload types mirror the paper exactly::
+
+    InfIn, InfOut, Intent, Vote, Commit, Abort, Result, Mail, Policy
+
+Payloads are plain dicts under a typed envelope so that every backend
+(in-memory, SQLite, file/KV) serializes them identically (JSON).
+"""
+from __future__ import annotations
+
+import enum
+import json
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional
+
+
+class PayloadType(str, enum.Enum):
+    INF_IN = "InfIn"
+    INF_OUT = "InfOut"
+    INTENT = "Intent"
+    VOTE = "Vote"
+    COMMIT = "Commit"
+    ABORT = "Abort"
+    RESULT = "Result"
+    MAIL = "Mail"
+    POLICY = "Policy"
+
+    @classmethod
+    def parse(cls, v: "PayloadType | str") -> "PayloadType":
+        return v if isinstance(v, PayloadType) else cls(v)
+
+
+ALL_TYPES: tuple = tuple(PayloadType)
+
+
+@dataclass(frozen=True)
+class Payload:
+    """Typed payload: a type tag plus an open JSON-serializable body."""
+
+    type: PayloadType
+    body: Dict[str, Any] = field(default_factory=dict)
+
+    def to_json(self) -> str:
+        return json.dumps({"type": self.type.value, "body": self.body},
+                          sort_keys=True, default=_json_default)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Payload":
+        d = json.loads(s)
+        return cls(type=PayloadType(d["type"]), body=d["body"])
+
+
+def _json_default(o):
+    # numpy scalars / arrays sneak into result bodies; make them plain.
+    if hasattr(o, "tolist"):
+        return o.tolist()
+    if hasattr(o, "item"):
+        return o.item()
+    raise TypeError(f"not JSON-serializable: {type(o)}")
+
+
+@dataclass(frozen=True)
+class Entry:
+    """A durable record on the bus. ``position`` is the logical timestamp."""
+
+    position: int
+    realtime_ts: float
+    payload: Payload
+
+    @property
+    def type(self) -> PayloadType:
+        return self.payload.type
+
+    @property
+    def body(self) -> Dict[str, Any]:
+        return self.payload.body
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {"position": self.position, "realtime_ts": self.realtime_ts,
+             "payload": {"type": self.payload.type.value,
+                         "body": self.payload.body}},
+            sort_keys=True, default=_json_default)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Entry":
+        d = json.loads(s)
+        return cls(position=d["position"], realtime_ts=d["realtime_ts"],
+                   payload=Payload(PayloadType(d["payload"]["type"]),
+                                   d["payload"]["body"]))
+
+
+# ---------------------------------------------------------------------------
+# Payload constructors — the schema each component speaks.
+# ---------------------------------------------------------------------------
+
+def new_id() -> str:
+    return uuid.uuid4().hex[:16]
+
+
+def mail(text: str, sender: str = "user", **extra) -> Payload:
+    return Payload(PayloadType.MAIL, {"text": text, "sender": sender, **extra})
+
+
+def inf_in(context: Dict[str, Any], driver_id: str) -> Payload:
+    return Payload(PayloadType.INF_IN, {"context": context,
+                                        "driver_id": driver_id})
+
+
+def inf_out(plan: Dict[str, Any], driver_id: str) -> Payload:
+    """Planner ("inference layer") output — logged so replay is deterministic."""
+    return Payload(PayloadType.INF_OUT, {"plan": plan, "driver_id": driver_id})
+
+
+def intent(kind: str, args: Dict[str, Any], driver_id: str,
+           intent_id: Optional[str] = None, **extra) -> Payload:
+    return Payload(PayloadType.INTENT, {
+        "intent_id": intent_id or new_id(), "kind": kind, "args": args,
+        "driver_id": driver_id, **extra})
+
+
+def vote(intent_id: str, voter_type: str, voter_id: str, approve: bool,
+         reason: str = "", **extra) -> Payload:
+    return Payload(PayloadType.VOTE, {
+        "intent_id": intent_id, "voter_type": voter_type,
+        "voter_id": voter_id, "approve": bool(approve), "reason": reason,
+        **extra})
+
+
+def commit(intent_id: str, decider_id: str, **extra) -> Payload:
+    return Payload(PayloadType.COMMIT, {"intent_id": intent_id,
+                                        "decider_id": decider_id, **extra})
+
+
+def abort(intent_id: str, decider_id: str, reason: str = "", **extra) -> Payload:
+    return Payload(PayloadType.ABORT, {"intent_id": intent_id,
+                                       "decider_id": decider_id,
+                                       "reason": reason, **extra})
+
+
+def result(intent_id: str, ok: bool, value: Dict[str, Any],
+           executor_id: str, recovered: bool = False, **extra) -> Payload:
+    """``recovered=True`` is the special reboot entry of §3.2 (Executor)."""
+    return Payload(PayloadType.RESULT, {
+        "intent_id": intent_id, "ok": bool(ok), "value": value,
+        "executor_id": executor_id, "recovered": bool(recovered), **extra})
+
+
+def policy(scope: str, body: Dict[str, Any], issuer: str = "admin") -> Payload:
+    """scope: 'decider' | 'voter:<type>' | 'driver' | 'executor'."""
+    return Payload(PayloadType.POLICY, {"scope": scope, "policy": body,
+                                        "issuer": issuer})
+
+
+def driver_election(driver_id: str, epoch: int) -> Payload:
+    """Driver self-election / fencing entry (paper §3.2, Driver)."""
+    return policy("driver", {"elect": driver_id, "epoch": epoch},
+                  issuer=driver_id)
+
+
+def entries_of(entries: Iterable[Entry], *types: PayloadType) -> List[Entry]:
+    ts = set(types)
+    return [e for e in entries if e.type in ts]

@@ -1,0 +1,118 @@
+"""The Executor: runs the Executing stage (paper §3, Fig. 2/3).
+
+The Executor plays ``Commit`` entries (reading the corresponding ``Intent``
+bodies), executes the intention against the *environment* — here, the
+training/serving environment holding jitted step functions, device state,
+the checkpoint store and the data-pipeline cursor — and appends a
+``Result``.
+
+Recovery (paper §3.2): the Executor is *not* a replayable state machine;
+its effects live in the external environment. Recovery is conservative,
+**at-most-once**: a rebooting Executor appends a special
+``Result(recovered=True)`` entry (which acts as an effective fence for the
+old executor) and lets the Driver drive *semantic recovery* through the
+voters. The Executor never re-executes an intent_id it has a logged Result
+for, and ignores duplicate Commits (duplicate Deciders are legal).
+"""
+from __future__ import annotations
+
+import time
+import traceback
+from typing import Any, Callable, Dict, Optional, Set
+
+from . import entries as E
+from .acl import BusClient
+from .entries import Entry, PayloadType
+from .policy import PolicyState
+
+Handler = Callable[[Dict[str, Any], Any], Dict[str, Any]]
+# handler(args, env) -> result-value dict
+
+
+class Executor:
+    def __init__(self, client: BusClient, env: Any,
+                 handlers: Optional[Dict[str, Handler]] = None,
+                 executor_id: Optional[str] = None,
+                 announce_reboot: bool = False):
+        self.client = client
+        self.env = env
+        self.handlers: Dict[str, Handler] = dict(handlers or {})
+        self.executor_id = executor_id or f"executor-{E.new_id()}"
+        self.cursor = 0
+        self.policy = PolicyState()
+        self.intents: Dict[str, Dict[str, Any]] = {}
+        self.executed: Set[str] = set()  # intent_ids with a logged Result
+        self.exec_latency_s = 0.0
+        if announce_reboot:
+            self._announce_reboot()
+
+    def _announce_reboot(self) -> None:
+        """§3.2: 'when an Executor reboots, it appends a special entry of the
+        result type' — picked up by the Driver to start semantic recovery.
+
+        Before announcing, the executor conservatively scans the existing
+        log so it knows which intents already have Results (at-most-once).
+        """
+        for e in self.client.read(0):
+            if e.type == PayloadType.INTENT:
+                self.intents[e.body["intent_id"]] = e.body
+            elif e.type == PayloadType.RESULT and not e.body.get("recovered"):
+                self.executed.add(e.body["intent_id"])
+        self.cursor = self.client.tail()
+        self.client.append(E.result(
+            "__reboot__", ok=True,
+            value={"note": "executor rebooted; environment state unknown"},
+            executor_id=self.executor_id, recovered=True))
+
+    def register(self, kind: str, handler: Handler) -> None:
+        self.handlers[kind] = handler
+
+    # -- transitions ---------------------------------------------------------
+    def handle(self, entry: Entry) -> None:
+        t = entry.type
+        if t == PayloadType.POLICY:
+            self.policy.apply(entry)
+            return
+        if t == PayloadType.INTENT:
+            if self.policy.driver_is_current(entry.body.get("driver_id")):
+                self.intents[entry.body["intent_id"]] = entry.body
+            return
+        if t == PayloadType.RESULT and not entry.body.get("recovered"):
+            # Learn results appended by *other* executors (failover dedupe).
+            self.executed.add(entry.body["intent_id"])
+            return
+        if t != PayloadType.COMMIT:
+            return
+        iid = entry.body["intent_id"]
+        if iid in self.executed:
+            return  # duplicate commit (duplicate Decider) or already done
+        intent = self.intents.get(iid)
+        if intent is None:
+            return  # commit for a fenced driver's intent we never recorded
+        self.executed.add(iid)
+        self._execute(intent)
+
+    def _execute(self, intent: Dict[str, Any]) -> None:
+        kind, args, iid = intent["kind"], intent.get("args", {}), intent["intent_id"]
+        handler = self.handlers.get(kind)
+        t0 = time.monotonic()
+        if handler is None:
+            ok, value = False, {"error": f"no handler for kind {kind!r}"}
+        else:
+            try:
+                value = handler(args, self.env) or {}
+                ok = True
+            except Exception as ex:  # noqa: BLE001 - report, don't crash
+                ok, value = False, {"error": repr(ex),
+                                    "traceback": traceback.format_exc()[-2000:]}
+        self.exec_latency_s += time.monotonic() - t0
+        self.client.append(E.result(iid, ok, value, self.executor_id))
+
+    def play_available(self) -> int:
+        tail = self.client.tail()
+        played = self.client.read(self.cursor, tail)
+        for e in played:
+            self.handle(e)
+        # advance over ACL-filtered (invisible) entries too
+        self.cursor = max(self.cursor, tail)
+        return len(played)

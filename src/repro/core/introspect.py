@@ -1,0 +1,143 @@
+"""Agentic introspection (paper §1, §5.3, §5.4): inference over the bus.
+
+The paper runs LLM inference over the agent's own execution history. Here
+the "inference" is implemented as structured analysis over the typed log —
+the same information flow (entire execution history, not token-only
+trajectories), feeding semantic recovery, semantic health checks, and the
+swarm Supervisor.
+"""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from .bus import AgentBus
+from .entries import Entry, PayloadType
+
+
+@dataclass
+class IntentTrace:
+    """One intention's full lifecycle reconstructed from the log."""
+
+    intent_id: str
+    kind: str
+    args: Dict[str, Any]
+    intent_pos: int
+    votes: List[Dict[str, Any]] = field(default_factory=list)
+    decision: Optional[str] = None  # 'commit' | 'abort' | None
+    result: Optional[Dict[str, Any]] = None
+    intent_ts: float = 0.0
+    result_ts: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        if self.result is None:
+            return float("nan")
+        return self.result_ts - self.intent_ts
+
+
+def trace_intents(entries: Sequence[Entry]) -> List[IntentTrace]:
+    traces: Dict[str, IntentTrace] = {}
+    order: List[str] = []
+    for e in entries:
+        b = e.body
+        if e.type == PayloadType.INTENT:
+            iid = b["intent_id"]
+            if iid not in traces:
+                traces[iid] = IntentTrace(iid, b["kind"], b.get("args", {}),
+                                          e.position, intent_ts=e.realtime_ts)
+                order.append(iid)
+        elif e.type == PayloadType.VOTE:
+            t = traces.get(b["intent_id"])
+            if t:
+                t.votes.append(b)
+        elif e.type == PayloadType.COMMIT:
+            t = traces.get(b["intent_id"])
+            if t and t.decision is None:
+                t.decision = "commit"
+        elif e.type == PayloadType.ABORT:
+            t = traces.get(b["intent_id"])
+            if t and t.decision is None:
+                t.decision = "abort"
+        elif e.type == PayloadType.RESULT and not b.get("recovered"):
+            t = traces.get(b["intent_id"])
+            if t:
+                t.result = b
+                t.result_ts = e.realtime_ts
+    return [traces[i] for i in order]
+
+
+def summarize_bus(bus: AgentBus, start: int = 0) -> Dict[str, Any]:
+    """A semantic summary of an agent's activity — what a Supervisor reads."""
+    entries = bus.read(start)
+    traces = trace_intents(entries)
+    by_type: Dict[str, int] = {}
+    bytes_by_type: Dict[str, int] = {}
+    for e in entries:
+        by_type[e.type.value] = by_type.get(e.type.value, 0) + 1
+        bytes_by_type[e.type.value] = (bytes_by_type.get(e.type.value, 0)
+                                       + len(e.payload.to_json()))
+    completed = [t for t in traces if t.result is not None]
+    failed = [t for t in completed if not t.result.get("ok", False)]
+    lat = [t.latency_s for t in completed if t.latency_s == t.latency_s]
+    return {
+        "tail": bus.tail(),
+        "entries_by_type": by_type,
+        "bytes_by_type": bytes_by_type,
+        "total_bytes": sum(bytes_by_type.values()),
+        "n_intents": len(traces),
+        "n_committed": sum(1 for t in traces if t.decision == "commit"),
+        "n_aborted": sum(1 for t in traces if t.decision == "abort"),
+        "n_completed": len(completed),
+        "n_failed": len(failed),
+        "mean_latency_s": statistics.fmean(lat) if lat else 0.0,
+        "p90_latency_s": (sorted(lat)[int(0.9 * (len(lat) - 1))] if lat else 0.0),
+        "inflight": [t.intent_id for t in traces
+                     if t.decision == "commit" and t.result is None],
+        "last_kinds": [t.kind for t in traces[-8:]],
+        "work_claims": sorted({tuple(t.args["work_range"])
+                               for t in traces
+                               if "work_range" in t.args
+                               and t.decision == "commit"}),
+        "completed_work": sorted({tuple(t.args["work_range"])
+                                  for t in completed
+                                  if "work_range" in t.args
+                                  and t.result.get("ok")}),
+    }
+
+
+def health_check(bus: AgentBus, peer_summaries: Sequence[Dict[str, Any]] = (),
+                 slow_factor: float = 3.0) -> Dict[str, Any]:
+    """Semantic health check (paper §5.3): inspects per-intent latency in
+    the log; compares against the agent's own history and peers; flags a
+    straggler before a takeover."""
+    s = summarize_bus(bus)
+    traces = [t for t in trace_intents(bus.read(0)) if t.result is not None]
+    verdict = "healthy"
+    reasons: List[str] = []
+    if s["inflight"]:
+        verdict = "in-flight"
+    if s["n_failed"] > 0 and s["n_completed"] > 0:
+        frac = s["n_failed"] / s["n_completed"]
+        if frac > 0.5:
+            verdict, _ = "failing", reasons.append(
+                f"{s['n_failed']}/{s['n_completed']} intents failed")
+    # Straggler detection: most recent latencies vs own earlier history.
+    lat = [t.latency_s for t in traces if t.latency_s == t.latency_s]
+    if len(lat) >= 6:
+        head = lat[: len(lat) // 2]
+        recent = lat[-3:]
+        if statistics.fmean(recent) > slow_factor * max(
+                statistics.fmean(head), 1e-9):
+            verdict = "straggler"
+            reasons.append(
+                f"recent latency {statistics.fmean(recent):.3f}s > "
+                f"{slow_factor}x historical {statistics.fmean(head):.3f}s")
+    # ... vs peers.
+    peer_lat = [p.get("mean_latency_s", 0.0) for p in peer_summaries]
+    if peer_lat and s["mean_latency_s"] > slow_factor * max(
+            statistics.fmean(peer_lat), 1e-9):
+        verdict = "straggler"
+        reasons.append("slow relative to peers")
+    return {"verdict": verdict, "reasons": reasons, "summary": s}

@@ -1,0 +1,145 @@
+"""AgentKernel: the AgentBus control plane (paper §4.1).
+
+Clients create AgentBus instances in one of four modes:
+
+* **Raw**          — just the bus.
+* **Auto-Decider** — bus + a remotely-run Decider.
+* **Auto-Voter**   — bus + Decider + voters from a pluggable library.
+* **Spawn**        — bus + a full sub-agent (Driver/Executor too), from a
+                     pre-built "image" (a registered factory). Backends:
+                     in-process threads (the K8s/local-process analogue).
+
+The kernel tracks every bus it creates, which is what the swarm Supervisor
+enumerates to introspect a fleet.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from .acl import BusClient
+from .agent import LogActAgent
+from .bus import AgentBus, make_bus
+from .decider import Decider
+from .driver import Planner
+from .executor import Handler
+from .snapshot import DirSnapshotStore, MemorySnapshotStore, SnapshotStore
+from .voter import RuleVoter, StatVoter, Voter, STANDARD_RULES
+
+VoterFactory = Callable[[BusClient], Voter]
+
+#: Pluggable voter library (paper §4.1 "run optional Voters ... from a
+#: pluggable library of available Voters").
+VOTER_LIBRARY: Dict[str, VoterFactory] = {
+    "rule": lambda c: RuleVoter(c, rules=STANDARD_RULES),
+    "rule_strict": lambda c: RuleVoter(c, rules=STANDARD_RULES,
+                                       default_approve=False),
+    "stat": lambda c: StatVoter(c),
+    "stat_override": lambda c: StatVoter(c, override_for="rule"),
+}
+
+#: Pre-built sub-agent images for Spawn mode: name -> factory(bus, kw)->agent
+AGENT_IMAGES: Dict[str, Callable[..., LogActAgent]] = {}
+
+
+def register_image(name: str) -> Callable[[Callable[..., LogActAgent]],
+                                          Callable[..., LogActAgent]]:
+    def deco(f: Callable[..., LogActAgent]) -> Callable[..., LogActAgent]:
+        AGENT_IMAGES[name] = f
+        return f
+    return deco
+
+
+@dataclass
+class BusHandle:
+    name: str
+    bus: AgentBus
+    agent: Optional[LogActAgent] = None
+    voters: List[Voter] = field(default_factory=list)
+    decider: Optional[Decider] = None
+
+
+class AgentKernel:
+    def __init__(self, workdir: Optional[str] = None,
+                 default_backend: str = "memory"):
+        self.workdir = workdir
+        self.default_backend = default_backend
+        self.buses: Dict[str, BusHandle] = {}
+        self._lock = threading.Lock()
+
+    def snapshot_store(self) -> SnapshotStore:
+        if self.workdir:
+            return DirSnapshotStore(os.path.join(self.workdir, "snapshots"))
+        return MemorySnapshotStore()
+
+    def create_bus(self, name: str, mode: str = "raw",
+                   backend: Optional[str] = None,
+                   voters: Sequence[str] = (),
+                   image: Optional[str] = None,
+                   image_kw: Optional[Dict[str, Any]] = None,
+                   threaded: bool = False,
+                   **bus_kw) -> BusHandle:
+        backend = backend or self.default_backend
+        path = None
+        if backend in ("sqlite", "kv"):
+            assert self.workdir, f"{backend} backend needs a kernel workdir"
+            root = os.path.join(self.workdir, "buses")
+            os.makedirs(root, exist_ok=True)
+            path = os.path.join(root, f"{name}.db" if backend == "sqlite"
+                                else name)
+        bus = make_bus(backend, path=path, **bus_kw)
+        handle = BusHandle(name=name, bus=bus)
+        if mode == "spawn":
+            assert image in AGENT_IMAGES, f"unknown image {image!r}"
+            agent = AGENT_IMAGES[image](bus=bus,
+                                        snapshot_store=self.snapshot_store(),
+                                        **(image_kw or {}))
+            for vname in voters:
+                agent.add_voter(VOTER_LIBRARY[vname](
+                    BusClient(bus, f"{name}-{vname}", "voter")),
+                    from_tail=False)
+            handle.agent = agent
+            handle.voters = agent.voters
+            handle.decider = agent.decider
+            if threaded:
+                agent.start()
+        elif mode in ("auto_decider", "auto_voter"):
+            handle.decider = Decider(BusClient(bus, f"{name}-decider",
+                                               "decider"))
+            if mode == "auto_voter":
+                for vname in voters:
+                    handle.voters.append(VOTER_LIBRARY[vname](
+                        BusClient(bus, f"{name}-{vname}", "voter")))
+        elif mode != "raw":
+            raise ValueError(f"unknown mode {mode!r}")
+        with self._lock:
+            self.buses[name] = handle
+        return handle
+
+    def list_buses(self) -> List[str]:
+        with self._lock:
+            return sorted(self.buses)
+
+    def get(self, name: str) -> BusHandle:
+        return self.buses[name]
+
+    def tick_all(self) -> int:
+        """Synchronous scheduler across every managed bus (tests/benchmarks)."""
+        n = 0
+        for h in list(self.buses.values()):
+            if h.agent is not None:
+                n += h.agent.tick()
+            else:
+                for v in h.voters:
+                    n += v.play_available()
+                if h.decider is not None:
+                    n += h.decider.play_available()
+        return n
+
+    def shutdown(self) -> None:
+        for h in self.buses.values():
+            if h.agent is not None:
+                h.agent.stop()
+            h.bus.close()

@@ -1,0 +1,85 @@
+"""Policy entries and policy state (paper §3, "Policy").
+
+Policy changes flow through the log itself, so every component of the
+deconstructed state machine applies them consistently and at the same
+logical time (log position). Scopes:
+
+* ``decider``      — quorum policy: ``on_by_default`` | ``first_voter`` |
+                     ``boolean_OR`` | ``boolean_AND`` | ``quorum_k`` (+args).
+* ``voter:<type>`` — per-voter-type knobs (e.g. allowlist additions,
+                     anomaly-z thresholds).
+* ``driver``       — driver election / fencing entries.
+* ``executor``     — executor knobs (e.g. steps_per_intention).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from .entries import Entry, PayloadType
+
+
+@dataclass
+class DeciderPolicy:
+    """Deterministic quorum policy. Defaults to the paper's on_by_default."""
+
+    mode: str = "on_by_default"
+    # voter types participating in the decision (for OR/AND/quorum_k):
+    voter_types: tuple = ()
+    k: int = 1  # for quorum_k
+
+    @classmethod
+    def from_body(cls, body: Dict[str, Any]) -> "DeciderPolicy":
+        return cls(mode=body.get("mode", "on_by_default"),
+                   voter_types=tuple(body.get("voter_types", ())),
+                   k=int(body.get("k", 1)))
+
+
+@dataclass
+class PolicyState:
+    """Replayable view of all policy entries seen so far on the log.
+
+    Every component keeps one of these and feeds it each POLICY entry it
+    plays; lookups are O(1). Driver fencing state lives here too since it
+    is communicated via ``scope='driver'`` policy entries.
+    """
+
+    decider: DeciderPolicy = field(default_factory=DeciderPolicy)
+    voter: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    executor: Dict[str, Any] = field(default_factory=dict)
+    # Driver fencing: the currently-elected driver and its election epoch.
+    elected_driver: Optional[str] = None
+    driver_epoch: int = -1
+
+    def apply(self, entry: Entry) -> None:
+        if entry.type != PayloadType.POLICY:
+            return
+        scope = entry.body.get("scope", "")
+        body = entry.body.get("policy", {})
+        if scope == "decider":
+            self.decider = DeciderPolicy.from_body(body)
+        elif scope.startswith("voter:"):
+            vt = scope.split(":", 1)[1]
+            self.voter.setdefault(vt, {}).update(body)
+        elif scope == "executor":
+            self.executor.update(body)
+        elif scope == "driver":
+            epoch = int(body.get("epoch", 0))
+            # Highest epoch wins; ties broken by log order (first applied
+            # stays — a later equal-epoch election is ignored, and that
+            # driver must observe it lost and re-elect at a higher epoch).
+            if epoch > self.driver_epoch:
+                self.driver_epoch = epoch
+                self.elected_driver = body.get("elect")
+
+    def driver_is_current(self, driver_id: Optional[str]) -> bool:
+        """True iff ``driver_id`` is the currently elected (unfenced) driver.
+
+        If no election has ever been logged, any driver is accepted (single-
+        driver bootstrap); once any election exists, only the winner's
+        intentions are played (paper §3.2: "reject intentions from a fenced
+        Driver").
+        """
+        if self.elected_driver is None:
+            return True
+        return driver_id == self.elected_driver

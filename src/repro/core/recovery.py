@@ -1,0 +1,126 @@
+"""Semantic recovery (paper §3.2 Executor + §5.3).
+
+A crashed/slow agent's bus is handed to a recovery flow that:
+
+1. **Introspects** the original bus's intentions (only the intentions — the
+   paper's recovery prompt: "inspect only the intentions on the original
+   bus") to determine what was planned and what completed;
+2. issues **exploratory intentions** that probe the environment to find
+   where the interrupted work actually stopped (at-most-once: never blindly
+   re-run);
+3. **rolls forward** the remaining work, optionally *repairing* the
+   implementation (the paper's rglob→os.scandir 290× fix) via pluggable
+   ``Optimizer`` hooks that pattern-match known pathologies in the logged
+   intention payloads.
+
+All recovery actions flow through the normal Intent→Vote→Commit→Execute
+machinery — recovery is itself voted on (paper: "Executors cannot be relied
+[upon] to drive semantic recovery on their own ... without going through
+Voters").
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from .bus import AgentBus
+from .driver import Planner
+from .entries import PayloadType
+from .introspect import trace_intents
+
+OptimizerHook = Callable[[Dict[str, Any]], Optional[Dict[str, Any]]]
+# hook(original_intent_body) -> replacement args (or None if no fix applies)
+
+
+def known_pathology_fixes(intent_body: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    """Built-in fix library: detect slow implementations recorded in the log
+    and substitute efficient ones (the Fig-8 move)."""
+    args = intent_body.get("args", {})
+    impl = args.get("impl")
+    if impl == "rglob_sorted":  # recursive-enumerate-then-sort pathology
+        return {**args, "impl": "scandir"}
+    if impl == "unchunked":  # whole-array eval that thrashes
+        return {**args, "impl": "chunked"}
+    return None
+
+
+class RecoveryPlanner(Planner):
+    """A Planner for a recovery agent (or a restarted original agent).
+
+    Drives the three-phase flow above over a *work-range* task shape: the
+    original task is a list of work units processed in range-chunks, with
+    per-chunk ``Result`` entries recording completion (this mirrors the
+    paper's 2000-folder checksum task). Phases:
+
+      probe   -> issue an exploratory intent that asks the environment how
+                 much output already exists (never trusts the log alone);
+      resume  -> re-issue the interrupted processing intent for the
+                 remaining range only, with pathology fixes applied;
+      verify  -> issue a verification intent over the full output.
+    """
+
+    def __init__(self, original_bus: AgentBus,
+                 optimizer_hooks: Sequence[OptimizerHook] = (
+                     known_pathology_fixes,)):
+        self.original = original_bus
+        self.hooks = list(optimizer_hooks)
+        self.phase = "probe"
+        self.probe_result: Optional[Dict[str, Any]] = None
+        self.plan_notes: List[str] = []
+        # Introspect only the intentions of the original bus (paper §5.3).
+        intents = [e.body for e in self.original.read(0)
+                   if e.type == PayloadType.INTENT]
+        self.original_intents = intents
+        self.work_intent = next(
+            (b for b in reversed(intents) if "work_range" in b.get("args", {})),
+            None)
+
+    # -- the "inference" over introspected history ---------------------------
+    def propose(self, context: Dict[str, Any]) -> Dict[str, Any]:
+        if self.work_intent is None:
+            return {"done": True, "note": "nothing to recover"}
+        if self.phase == "probe":
+            self.phase = "resume"
+            self.plan_notes.append("check what was already completed")
+            return {"intent": {"kind": "probe_progress",
+                               "args": {"task": self.work_intent["args"]}},
+                    "note": "Let me check what was already completed"}
+        if self.phase == "resume":
+            last = context["history"][-1] if context["history"] else {}
+            value = last.get("body", {}).get("value", {})
+            done_until = int(value.get("done_until", 0))
+            lo, hi = self.work_intent["args"]["work_range"]
+            if done_until >= hi:
+                self.phase = "verify"
+                return self.propose(context)
+            args = dict(self.work_intent["args"])
+            args["work_range"] = [max(lo, done_until), hi]
+            fixed = self._apply_fixes({"kind": self.work_intent["kind"],
+                                       "args": args})
+            self.phase = "verify"
+            self.plan_notes.append(
+                f"continue from {done_until}; impl={fixed.get('impl')}")
+            return {"intent": {"kind": self.work_intent["kind"],
+                               "args": fixed},
+                    "note": "Continue from where it left off"}
+        if self.phase == "verify":
+            self.phase = "done"
+            return {"intent": {"kind": "verify_output",
+                               "args": {"task": self.work_intent["args"]}},
+                    "note": "Verify the output"}
+        return {"done": True, "note": "Task completed successfully!"}
+
+    def _apply_fixes(self, intent_body: Dict[str, Any]) -> Dict[str, Any]:
+        args = dict(intent_body.get("args", {}))
+        for hook in self.hooks:
+            fixed = hook({"kind": intent_body["kind"], "args": args})
+            if fixed is not None:
+                args = fixed
+        return args
+
+
+def committed_unexecuted(bus: AgentBus) -> List[Dict[str, Any]]:
+    """WAL-style scan: committed intentions without a Result — the at-most-
+    once candidates a recovering executor must treat as 'state unknown'."""
+    return [t.args | {"intent_id": t.intent_id, "kind": t.kind}
+            for t in trace_intents(bus.read(0))
+            if t.decision == "commit" and t.result is None]

@@ -1,0 +1,69 @@
+"""Snapshot store for the replicated-state-machine components (paper §3.2:
+"each component has access to a remote snapshot store (with a key-value or
+object store API, e.g., S3)").
+
+Two implementations: in-memory (tests) and a directory-backed object store.
+Snapshots are keyed ``<component_id>/<log_position>`` and carry the log
+position they correspond to, so recovery = load latest snapshot + play the
+log suffix from that position.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+
+class SnapshotStore:
+    def put(self, component_id: str, position: int,
+            state: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def latest(self, component_id: str) -> Optional[Tuple[int, Dict[str, Any]]]:
+        """Return (position, state) of the newest snapshot, or None."""
+        raise NotImplementedError
+
+
+class MemorySnapshotStore(SnapshotStore):
+    def __init__(self) -> None:
+        self._snaps: Dict[str, Dict[int, Dict[str, Any]]] = {}
+
+    def put(self, component_id: str, position: int,
+            state: Dict[str, Any]) -> None:
+        self._snaps.setdefault(component_id, {})[position] = json.loads(
+            json.dumps(state))
+
+    def latest(self, component_id: str) -> Optional[Tuple[int, Dict[str, Any]]]:
+        snaps = self._snaps.get(component_id)
+        if not snaps:
+            return None
+        pos = max(snaps)
+        return pos, snaps[pos]
+
+
+class DirSnapshotStore(SnapshotStore):
+    def __init__(self, root: str) -> None:
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _dir(self, component_id: str) -> str:
+        d = os.path.join(self.root, component_id)
+        os.makedirs(d, exist_ok=True)
+        return d
+
+    def put(self, component_id: str, position: int,
+            state: Dict[str, Any]) -> None:
+        path = os.path.join(self._dir(component_id), f"{position:012d}.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f)
+        os.replace(tmp, path)  # atomic publish
+
+    def latest(self, component_id: str) -> Optional[Tuple[int, Dict[str, Any]]]:
+        d = self._dir(component_id)
+        names = sorted(n for n in os.listdir(d) if n.endswith(".json"))
+        if not names:
+            return None
+        name = names[-1]
+        with open(os.path.join(d, name)) as f:
+            return int(name[:-5]), json.load(f)

@@ -1,0 +1,88 @@
+"""Swarm Supervisor (paper §5.4): a centralized "gossip hub" that
+periodically introspects every worker's AgentBus and sends workers mail
+with (a) fixes other workers discovered for shared infrastructural issues
+and (b) deduplication hints so workers avoid redundant work.
+
+The Supervisor only holds the ``supervisor`` role: it can read everything
+but append only Mail — it cannot vote, commit, or change policy.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+from .acl import BusClient
+from .bus import AgentBus
+from .entries import PayloadType, mail
+from .introspect import health_check, summarize_bus
+
+
+class Supervisor:
+    def __init__(self, worker_buses: Dict[str, AgentBus],
+                 supervisor_id: str = "supervisor"):
+        self.workers = dict(worker_buses)
+        self.clients = {name: BusClient(bus, supervisor_id, "supervisor")
+                        for name, bus in self.workers.items()}
+        self.known_fixes: Dict[str, str] = {}   # issue -> fix text
+        self.sent_fixes: Dict[str, Set[str]] = {n: set() for n in self.workers}
+        self.claimed: Dict[Tuple[int, int], str] = {}  # work_range -> worker
+        self._claims_sent: Dict[str, Set[Tuple[int, int]]] = {}
+        self.mail_sent = 0
+
+    def sweep(self) -> Dict[str, Any]:
+        """One introspection round over the fleet. Returns the fleet view."""
+        summaries = {n: summarize_bus(b) for n, b in self.workers.items()}
+        # 1) Harvest fixes: a worker that failed then succeeded on the same
+        #    kind has implicitly discovered a fix; workers also publish
+        #    explicit fix notes in result values ({"fix": {...}}).
+        for name, bus in self.workers.items():
+            for e in bus.read(0):
+                if e.type != PayloadType.RESULT:
+                    continue
+                fix = e.body.get("value", {}).get("fix")
+                if fix:
+                    self.known_fixes[str(fix.get("issue"))] = str(
+                        fix.get("remedy"))
+        # 2) Broadcast fixes each worker hasn't seen yet.
+        for name in self.workers:
+            for issue, remedy in self.known_fixes.items():
+                if issue in self.sent_fixes[name]:
+                    continue
+                self.clients[name].append(mail(
+                    f"[supervisor] known fix: {issue} -> {remedy}",
+                    sender="supervisor", fix={"issue": issue,
+                                              "remedy": remedy}))
+                self.sent_fixes[name].add(issue)
+                self.mail_sent += 1
+        # 3) Dedup work claims: first claimant wins; later claimants get a
+        #    release note so they pick different ranges.
+        for name, s in summaries.items():
+            for rng in s["work_claims"]:
+                rng_t = tuple(rng)
+                owner = self.claimed.setdefault(rng_t, name)
+                if owner != name:
+                    self.clients[name].append(mail(
+                        f"[supervisor] range {rng} already owned by {owner};"
+                        " skip it", sender="supervisor",
+                        dedup={"range": list(rng), "owner": owner}))
+                    self.mail_sent += 1
+        # 3b) Gossip-hub: broadcast every claim each worker hasn't seen,
+        #     so workers stop proposing ranges peers already own.
+        for name in self.workers:
+            seen = self._claims_sent.setdefault(name, set())
+            fresh = [list(r) for r, owner in self.claimed.items()
+                     if owner != name and r not in seen]
+            if fresh:
+                self.clients[name].append(mail(
+                    f"[supervisor] {len(fresh)} ranges claimed by peers",
+                    sender="supervisor", claims_snapshot=fresh))
+                seen.update(tuple(r) for r in fresh)
+                self.mail_sent += 1
+        # 4) Health: flag stragglers relative to the fleet.
+        health = {}
+        for name, bus in self.workers.items():
+            peer = [s for n, s in summaries.items() if n != name]
+            health[name] = health_check(bus, peer_summaries=peer)
+        return {"summaries": summaries, "health": health,
+                "known_fixes": dict(self.known_fixes),
+                "claimed": {str(k): v for k, v in self.claimed.items()},
+                "mail_sent": self.mail_sent}

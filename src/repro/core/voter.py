@@ -1,0 +1,274 @@
+"""Voters: pluggable safety components (paper §3, Voting stage).
+
+A Voter plays ``Intent`` entries (plus ``Policy`` entries scoped to its
+type) and appends ``Vote`` entries. Two families, mirroring the paper:
+
+* **Classic / rule-based voters** (``RuleVoter``): no model contact;
+  deterministic predicates over the intention body — allow/deny lists for
+  lambda intentions, LR bounds, grad-norm guards, checkpoint-integrity
+  preconditions. Immune to "prompt injection" (poisoned result text).
+
+* **Model-based voters** (``StatVoter``): the LLM-voter analogue — runs
+  *inference over the bus history* (robust z-score anomaly detection over
+  logged metrics, plus an override protocol: it reads the rule voter's
+  vote and the original user mail before deciding, exactly like the
+  paper's dual-voter override prompt). Can be wrong in both directions;
+  combined with classic voters via Decider quorum policies.
+
+Voters are stateless between intents except for replayable policy/history
+state, so (paper §3.2) "they can simply show up and start voting".
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from . import entries as E
+from .acl import BusClient
+from .entries import Entry, PayloadType
+from .policy import PolicyState
+
+
+@dataclass
+class VoteDecision:
+    approve: bool
+    reason: str = ""
+
+
+Rule = Callable[[Dict[str, Any], Dict[str, Any]], Optional[VoteDecision]]
+# A rule takes (intent_body, voter_policy) and returns a VoteDecision to
+# short-circuit, or None to pass to the next rule.
+
+
+class Voter:
+    """Base voter: plays INTENT + POLICY, appends VOTE."""
+
+    voter_type = "base"
+    #: extra entry types this voter wants to observe (for history-aware votes)
+    observe_types: Sequence[PayloadType] = ()
+
+    def __init__(self, client: BusClient, voter_id: Optional[str] = None):
+        self.client = client
+        self.voter_id = voter_id or f"{self.voter_type}-{E.new_id()}"
+        self.cursor = 0
+        self.policy = PolicyState()
+        self.latency_s = 0.0  # cumulative voting latency (for Fig-5)
+
+    # -- the state-machine transition ---------------------------------------
+    def handle(self, entry: Entry) -> None:
+        if entry.type == PayloadType.POLICY:
+            self.policy.apply(entry)
+            return
+        if entry.type in self.observe_types:
+            self.observe(entry)
+        if entry.type != PayloadType.INTENT:
+            return
+        if not self.policy.driver_is_current(entry.body.get("driver_id")):
+            return  # fenced driver: ignore its intentions entirely
+        t0 = time.monotonic()
+        d = self.decide(entry)
+        self.latency_s += time.monotonic() - t0
+        if d is None:
+            return  # abstain
+        self.client.append(E.vote(
+            entry.body["intent_id"], self.voter_type, self.voter_id,
+            d.approve, d.reason))
+
+    def observe(self, entry: Entry) -> None:  # pragma: no cover - override
+        pass
+
+    def decide(self, intent_entry: Entry) -> Optional[VoteDecision]:
+        raise NotImplementedError
+
+    # -- play loop helpers ---------------------------------------------------
+    def play_available(self) -> int:
+        """Synchronously play all new entries; returns #entries played."""
+        tail = self.client.tail()
+        played = self.client.read(self.cursor, tail)
+        for e in played:
+            self.handle(e)
+        # advance over ACL-filtered (invisible) entries too
+        self.cursor = max(self.cursor, tail)
+        return len(played)
+
+    def my_policy(self) -> Dict[str, Any]:
+        return self.policy.voter.get(self.voter_type, {})
+
+
+class RuleVoter(Voter):
+    """Classic voter: an ordered chain of deterministic rules.
+
+    Default verdict is configurable: the paper's rule voter is conservative
+    (made from offline analysis of attack runs) — unknown intent kinds are
+    rejected when ``default_approve=False``.
+    """
+
+    voter_type = "rule"
+
+    def __init__(self, client: BusClient, rules: Sequence[Rule] = (),
+                 default_approve: bool = True, **kw):
+        super().__init__(client, **kw)
+        self.rules: List[Rule] = list(rules)
+        self.default_approve = default_approve
+
+    def decide(self, intent_entry: Entry) -> Optional[VoteDecision]:
+        body = intent_entry.body
+        pol = self.my_policy()
+        for rule in self.rules:
+            d = rule(body, pol)
+            if d is not None:
+                return d
+        return VoteDecision(self.default_approve, "default")
+
+
+# -- standard rules for the training/serving environment ---------------------
+
+def rule_kind_allowlist(body, pol) -> Optional[VoteDecision]:
+    allow = set(pol.get("kind_allowlist", ()) or ())
+    if allow and body["kind"] not in allow:
+        return VoteDecision(False, f"kind {body['kind']!r} not in allowlist")
+    return None
+
+
+def rule_kind_denylist(body, pol) -> Optional[VoteDecision]:
+    deny = set(pol.get("kind_denylist", ()) or ())
+    if body["kind"] in deny:
+        return VoteDecision(False, f"kind {body['kind']!r} denied")
+    return None
+
+
+def rule_lr_bounds(body, pol) -> Optional[VoteDecision]:
+    """Guard set_lr / train intentions against absurd learning rates."""
+    lr = body.get("args", {}).get("lr")
+    if lr is None:
+        return None
+    lo, hi = pol.get("lr_bounds", (0.0, 1.0))
+    if not (lo <= float(lr) <= hi):
+        return VoteDecision(False, f"lr {lr} outside [{lo}, {hi}]")
+    return None
+
+
+def rule_no_checkpoint_delete(body, pol) -> Optional[VoteDecision]:
+    if body["kind"] == "delete_checkpoint":
+        keep = pol.get("allow_delete_unpinned", False)
+        if not (keep and not body.get("args", {}).get("pinned", False)):
+            return VoteDecision(False, "checkpoint deletion blocked")
+    return None
+
+
+def rule_lambda_scan(body, pol) -> Optional[VoteDecision]:
+    """Scan run_lambda intentions (the CodeAct analogue) for denied tokens."""
+    if body["kind"] != "run_lambda":
+        return None
+    src = str(body.get("args", {}).get("source", ""))
+    for bad in pol.get("lambda_denied_tokens",
+                       ("os.remove", "shutil.rmtree", "rm -rf", "unlink")):
+        if bad in src:
+            return VoteDecision(False, f"lambda contains denied token {bad!r}")
+    return None
+
+
+def rule_data_cursor_monotonic(body, pol) -> Optional[VoteDecision]:
+    """Reject train intentions that would replay already-consumed data."""
+    if body["kind"] != "train_chunk":
+        return None
+    start = body.get("args", {}).get("data_start")
+    floor = pol.get("data_cursor_floor")
+    if start is not None and floor is not None and start < floor:
+        return VoteDecision(False, f"data cursor {start} < floor {floor}")
+    return None
+
+
+STANDARD_RULES: Sequence[Rule] = (
+    rule_kind_denylist, rule_kind_allowlist, rule_lr_bounds,
+    rule_no_checkpoint_delete, rule_lambda_scan, rule_data_cursor_monotonic,
+)
+
+
+class StatVoter(Voter):
+    """Model-based voter — "inference over the log" (the LLM-voter analogue).
+
+    Keeps a window of logged scalar metrics (loss / grad-norm from Result
+    entries) and flags intents whose declared expectation deviates from the
+    robust history statistics; additionally implements the paper's
+    *override* protocol: if configured as an override voter, it reads the
+    rule voter's vote (from the bus) plus the originating user mail before
+    deciding, and only fires when the rule voter rejected.
+    """
+
+    voter_type = "stat"
+    observe_types = (PayloadType.RESULT, PayloadType.VOTE, PayloadType.MAIL)
+
+    def __init__(self, client: BusClient, metric: str = "loss",
+                 z_threshold: float = 6.0, override_for: Optional[str] = None,
+                 judge: Optional[Callable[[Dict[str, Any], Dict[str, Any]], VoteDecision]] = None,
+                 **kw):
+        super().__init__(client, **kw)
+        self.metric = metric
+        self.z_threshold = z_threshold
+        self.history: List[float] = []
+        self.rule_votes: Dict[str, bool] = {}
+        self.user_mail: List[str] = []
+        self.override_for = override_for  # e.g. "rule"
+        self.judge = judge  # pluggable semantic judge (context, intent)->Vote
+        # intents seen before the overridden voter's vote arrived
+        self._awaiting: Dict[str, Entry] = {}
+
+    def observe(self, entry: Entry) -> None:
+        if entry.type == PayloadType.RESULT:
+            v = entry.body.get("value", {}).get(self.metric)
+            if isinstance(v, (int, float)):
+                self.history.append(float(v))
+        elif entry.type == PayloadType.VOTE:
+            if entry.body.get("voter_type") == self.override_for:
+                iid = entry.body["intent_id"]
+                self.rule_votes[iid] = entry.body["approve"]
+                pending = self._awaiting.pop(iid, None)
+                if pending is not None and not entry.body["approve"]:
+                    # the rule voter rejected an intent we deferred on:
+                    # run the (expensive) model-based judgement now
+                    d = self._judge(pending)
+                    if d is not None:
+                        self.client.append(E.vote(
+                            iid, self.voter_type, self.voter_id,
+                            d.approve, d.reason))
+        elif entry.type == PayloadType.MAIL:
+            self.user_mail.append(str(entry.body.get("text", "")))
+
+    def _zscore(self, x: float) -> float:
+        h = self.history[-64:]
+        if len(h) < 4:
+            return 0.0
+        med = sorted(h)[len(h) // 2]
+        mad = sorted(abs(v - med) for v in h)[len(h) // 2] or 1e-9
+        return abs(x - med) / (1.4826 * mad)
+
+    def decide(self, intent_entry: Entry) -> Optional[VoteDecision]:
+        body = intent_entry.body
+        iid = body["intent_id"]
+        if self.override_for is not None:
+            # Dual-voter token economy (paper §5.2): only run the expensive
+            # model-based judgement when the rule voter rejected.
+            rv = self.rule_votes.get(iid)
+            if rv is None:
+                # rule voter hasn't voted yet: defer (observe() will judge
+                # when its vote arrives, if it is a rejection)
+                self._awaiting[iid] = intent_entry
+                return None
+            if rv:
+                return None  # abstain; rule voter's approval stands
+        return self._judge(intent_entry)
+
+    def _judge(self, intent_entry: Entry) -> Optional[VoteDecision]:
+        body = intent_entry.body
+        iid = body["intent_id"]
+        if self.judge is not None:
+            ctx = {"history": self.history[-64:], "mail": self.user_mail,
+                   "rule_vote": self.rule_votes.get(iid)}
+            return self.judge(ctx, body)
+        x = body.get("args", {}).get(f"expected_{self.metric}")
+        if x is not None and self._zscore(float(x)) > self.z_threshold:
+            return VoteDecision(False, f"{self.metric} anomaly z>"
+                                       f"{self.z_threshold}")
+        return VoteDecision(True, "within history envelope")

@@ -1,0 +1,74 @@
+"""Post-SPMD HLO analysis: collective bytes + op census.
+
+``compiled.as_text()`` exposes the partitioned HLO, where cross-device
+communication is explicit (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, plus their async -start variants). We sum
+the *result* bytes of each collective op (the standard roofline convention
+for payload size) and report per-op-kind totals.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+"
+    r"(" + "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int],
+                                             Dict[str, int]]:
+    """Returns (total_bytes, bytes_by_op, count_by_op). ``-done`` ops are
+    skipped (their ``-start`` counterpart carries the payload); plain sync
+    ops count once."""
+    by_op: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        b = shape_bytes(shape_str)
+        by_op[op] = by_op.get(op, 0) + b
+        counts[op] = counts.get(op, 0) + 1
+    return sum(by_op.values()), by_op, counts
+
+
+def op_census(hlo_text: str, ops=("fusion", "dot", "convolution", "custom-call",
+                                  "dynamic-update-slice", "transpose",
+                                  "reshape", "copy")) -> Dict[str, int]:
+    census: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\S+\s+([a-z\-]+)\(",
+                     line)
+        if m and m.group(1) in ops:
+            census[m.group(1)] = census.get(m.group(1), 0) + 1
+    return census

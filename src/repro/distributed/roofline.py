@@ -1,0 +1,74 @@
+"""Three-term roofline model for TPU v5e (target hardware).
+
+    compute term    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes   / (chips * HBM_BW)
+    collective term = coll_bytes  / (chips * LINK_BW)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes (whole-program, i.e.
+global across the mesh); ``hlo_analysis.collective_bytes`` for collective
+payloads. MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) gives the
+useful-compute ratio.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link (per chip, per brief)
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_ratio: float
+    step_time_s: float
+    mfu: float
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+def analyze(arch: str, shape: str, chips: int, *, hlo_flops: float,
+            hlo_bytes: float, coll_bytes: float, model_flops: float
+            ) -> Roofline:
+    compute_s = hlo_flops / (chips * PEAK_FLOPS)
+    memory_s = hlo_bytes / (chips * HBM_BW)
+    collective_s = coll_bytes / (chips * LINK_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    mfu = (model_flops / (chips * PEAK_FLOPS)) / step if step > 0 else 0.0
+    return Roofline(
+        arch=arch, shape=shape, chips=chips, hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes, coll_bytes=coll_bytes, model_flops=model_flops,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck,
+        useful_ratio=(model_flops / hlo_flops) if hlo_flops else 0.0,
+        step_time_s=step, mfu=mfu)
+
+
+def model_flops_for(cfg, shape_cfg, n_layers_note: Optional[str] = None
+                    ) -> float:
+    """6*N*D tokens rule: train counts fwd+bwd (6ND); prefill counts 2ND;
+    decode counts 2N per generated token (D = tokens processed)."""
+    n = cfg.n_active_params()
+    tokens = shape_cfg.global_batch * shape_cfg.seq_len
+    if shape_cfg.kind == "train":
+        return 6.0 * n * tokens
+    if shape_cfg.kind == "prefill":
+        return 2.0 * n * tokens
+    # decode: one new token per sequence in the batch
+    return 2.0 * n * shape_cfg.global_batch

@@ -1,0 +1,151 @@
+"""Logical-axis sharding rules mapped onto the production mesh.
+
+Model code annotates activations via ``shard(x, 'batch', 'seq', None)`` and
+params carry logical axes (see ``models.params``). This module owns the
+logical→mesh mapping so the *same* model code runs single-device (rules
+inactive → no-ops), single-pod (16×16 data×model), or multi-pod
+(2×16×16 pod×data×model), with optional sequence parallelism for
+batch=1 long-context shapes.
+
+Param placement follows an FSDP+TP hybrid:
+  * "tensor" axes (heads / ff / experts / vocab) shard over ``model``;
+  * the complementary axis additionally shards over ``data`` (ZeRO-3-style
+    full parameter sharding) when ``fsdp=True``;
+  * scanned-layer leading axes ('layers') are never sharded.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class ShardingRules:
+    mesh: Optional[Mesh] = None
+    seq_parallel: bool = False      # shard 'seq' over data (batch=1 shapes)
+    fsdp: bool = True               # shard the non-tensor param dim over data
+    # logical activation axis -> mesh axes
+    act_rules: Dict[str, Any] = field(default_factory=dict)
+    # logical param axis -> mesh axes
+    param_rules: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.mesh is None:
+            return
+        axes = self.mesh.axis_names
+        data_axes = tuple(a for a in ("pod", "data") if a in axes)
+        batch = data_axes if not self.seq_parallel else (
+            ("pod",) if "pod" in axes else ())
+        self.act_rules.setdefault("batch", batch)
+        self.act_rules.setdefault(
+            "seq", ("data",) if self.seq_parallel else ())
+        self.act_rules.setdefault("heads", ("model",))
+        self.act_rules.setdefault("kv_heads", ("model",))
+        self.act_rules.setdefault("vocab", ("model",))
+        self.act_rules.setdefault("ff", ("model",))
+        self.act_rules.setdefault("experts", ("model",))
+        self.act_rules.setdefault("expert_cap", data_axes)
+        self.act_rules.setdefault("seq_cache", ("model",))
+        self.act_rules.setdefault("embed", ())
+        self.param_rules.setdefault("heads", ("model",))
+        self.param_rules.setdefault("kv_heads", ("model",))
+        self.param_rules.setdefault("ff", ("model",))
+        self.param_rules.setdefault("experts", ("model",))
+        self.param_rules.setdefault("vocab", ("model",))
+        self.param_rules.setdefault("ssm_inner", ("model",))
+        # FSDP: the 'embed' dim of weight matrices shards over data.
+        self.param_rules.setdefault(
+            "embed", (("data",) if self.fsdp and "data" in axes else ()))
+        self.param_rules.setdefault("layers", ())
+        # caches are data, not params, but flow through param_shardings too
+        self.param_rules.setdefault("batch", self.act_rules["batch"])
+        self.param_rules.setdefault("seq_cache", ("model",))
+
+    # -- spec builders -------------------------------------------------------
+    def act_spec(self, axes: Sequence[Optional[str]]) -> P:
+        parts = []
+        for a in axes:
+            r = self.act_rules.get(a, ()) if a else ()
+            parts.append(tuple(r) if r else None)
+        return P(*parts)
+
+    def param_spec(self, axes: Sequence[Optional[str]]) -> P:
+        parts = []
+        for a in axes:
+            r = self.param_rules.get(a, ()) if a else ()
+            parts.append(tuple(r) if r else None)
+        return P(*parts)
+
+
+_STATE = threading.local()
+
+
+def set_rules(rules: Optional[ShardingRules]) -> None:
+    _STATE.rules = rules
+
+
+def get_rules() -> Optional[ShardingRules]:
+    return getattr(_STATE, "rules", None)
+
+
+class use_rules:
+    def __init__(self, rules: Optional[ShardingRules]):
+        self.rules = rules
+
+    def __enter__(self):
+        self.prev = get_rules()
+        set_rules(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        set_rules(self.prev)
+
+
+def _fit_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Drop partitionings that don't divide the dimension (e.g. kv_heads=8
+    on a model axis of 16 for decode: fall back to replication there)."""
+    parts = []
+    used: set = set()
+    for dim, p in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if p is None:
+            parts.append(None)
+            continue
+        names = tuple(p) if isinstance(p, tuple) else (p,)
+        if any(nm in used for nm in names):  # a mesh axis can appear once
+            parts.append(None)
+            continue
+        size = 1
+        for nm in names:
+            size *= mesh.shape[nm]
+        if size and dim % size == 0:
+            parts.append(p)
+            used.update(names)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate activation ``x`` with logical axes (no-op without rules)."""
+    rules = get_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = _fit_spec(rules.mesh, rules.act_spec(axes), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def param_shardings(axes_tree: Any, shapes_tree: Any) -> Any:
+    """Map a logical-axes tree (from split_params) + matching shapes tree
+    to NamedShardings, with divisibility fallback."""
+    rules = get_rules()
+    assert rules is not None and rules.mesh is not None
+    return jax.tree.map(
+        lambda axes, val: NamedSharding(
+            rules.mesh,
+            _fit_spec(rules.mesh, rules.param_spec(axes), val.shape)),
+        axes_tree, shapes_tree, is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,113 @@
+"""Flash attention Pallas TPU kernel (blockwise online softmax).
+
+TPU-native tiling: Q/K/V tiles live in VMEM via BlockSpecs; the grid is
+(batch*q_heads, Sq/block_q, Sk/block_k) with the KV axis iterated
+minor-most so fp32 accumulators persist in VMEM scratch across KV steps
+(the classic TPU flash schedule). MXU alignment: block_q/block_k are
+multiples of 128 and head_dim is padded to 128 by the wrapper in ops.py.
+
+Supports: causal masking, sliding window, logit softcap, GQA (the K/V
+index map folds q-heads onto kv-heads). Oracle: ``ref.mha_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], block_q: int, block_k: int,
+                  n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    visible = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        visible &= k_pos <= q_pos
+    if window is not None:
+        visible &= k_pos > q_pos - window
+
+    # Skip blocks that are fully masked (above the causal diagonal /
+    # outside the window): everything except scratch init + final write.
+    need = jnp.any(visible) if (causal or window is not None) else True
+
+    @pl.when(need)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(visible, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, Dh); k/v: (BKv, Sk, Dh) with BH = BKv * rep (GQA folds
+    kv-head groups; see ops.flash_mha for the (B,S,H,D) wrapper)."""
+    bh, sq, dh = q.shape
+    bkv, sk, _ = k.shape
+    rep = bh // bkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    n_q, n_k = sq // block_q, sk // block_k
+    grid = (bh, n_q, n_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, n_kv_blocks=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda b, qi, ki, rep=rep: (b // rep, ki, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda b, qi, ki, rep=rep: (b // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

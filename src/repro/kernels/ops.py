@@ -1,0 +1,98 @@
+"""Jit'd wrappers exposing the Pallas kernels on model-shaped tensors."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as fa
+from . import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"))
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, scale: Optional[float] = None,
+              block_q: int = 128, block_k: int = 128,
+              interpret: bool = False) -> jax.Array:
+    """Model-shaped flash attention: q (B,Sq,H,Dh), k/v (B,Sk,Kv,Dh).
+    Pads Dh to a multiple of 128 (MXU lane width) and Sq/Sk to the block
+    sizes; folds (B,H) into the kernel's leading grid axis."""
+    bsz, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    dh_pad = -(-dh // 128) * 128
+    sq_pad = -(-sq // block_q) * block_q
+    sk_pad = -(-sk // block_k) * block_k
+
+    def pad(t, s_to, d_to):
+        return jnp.pad(t, ((0, 0), (0, s_to - t.shape[1]), (0, 0),
+                           (0, d_to - t.shape[3])))
+
+    qp = pad(q, sq_pad, dh_pad).transpose(0, 2, 1, 3).reshape(
+        bsz * h, sq_pad, dh_pad)
+    kp = pad(k, sk_pad, dh_pad).transpose(0, 2, 1, 3).reshape(
+        bsz * kv, sk_pad, dh_pad)
+    vp = pad(v, sk_pad, dh_pad).transpose(0, 2, 1, 3).reshape(
+        bsz * kv, sk_pad, dh_pad)
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    o = fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                           softcap=softcap, scale=scale, block_q=block_q,
+                           block_k=block_k, interpret=interpret)
+    o = o.reshape(bsz, h, sq_pad, dh_pad).transpose(0, 2, 1, 3)
+    return o[:, :sq, :, :dh]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block",
+                                             "interpret"))
+def ssd_chunked_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
+                       B: jax.Array, C: jax.Array,
+                       D: Optional[jax.Array] = None,
+                       init_state: Optional[jax.Array] = None,
+                       chunk: int = 256, head_block: int = 8,
+                       interpret: bool = False
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Drop-in replacement for models.ssm.ssd_chunked using the Pallas
+    intra-chunk kernel. x (B,S,H,P); dt (B,S,H); B/C (B,S,G,N)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_pad = x.shape[1]
+    nc, q = s_pad // chunk, chunk
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Bc = jnp.repeat(B, rep, axis=2).reshape(b, nc, q, h, n)
+    Cc = jnp.repeat(C, rep, axis=2).reshape(b, nc, q, h, n)
+    a = A.astype(jnp.float32)
+
+    y_intra, states, decay = ssd_scan.ssd_intra(
+        xc, dtc, a, Bc, Cc, head_block=head_block, interpret=interpret)
+
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+
+    def step(s_in, xs):
+        st, dc = xs
+        return s_in * dc[..., None, None] + st, s_in
+
+    final_state, prev = jax.lax.scan(
+        step, state0, (states.transpose(1, 0, 2, 3, 4),
+                       decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    la = a[None, None, None] * dtc
+    cs = jnp.cumsum(la, axis=2)
+    y_inter = jnp.einsum("bcthn,bcth,bchpn->bcthp", Cc.astype(jnp.float32),
+                         jnp.exp(cs), prev)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(b, s_pad, h, p)[:, :s]
+    if D is not None:
+        y = y + D[None, None, :, None] * x.astype(jnp.float32)[:, :s]
+    return y.astype(x.dtype), final_state

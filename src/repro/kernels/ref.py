@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True, window: Optional[int] = None,
+            softcap: Optional[float] = None,
+            scale: Optional[float] = None) -> jax.Array:
+    """Dense softmax attention. q (BH,Sq,D); k/v (BKv,Sk,D); GQA by
+    folding: q head i attends kv head i // (BH // BKv)."""
+    bh, sq, dh = q.shape
+    bkv, sk, _ = k.shape
+    rep = bh // bkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    kx = jnp.repeat(k, rep, axis=0)
+    vx = jnp.repeat(v, rep, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vx.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_intra_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                  c: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for kernels.ssd_scan.ssd_intra. Shapes as there."""
+    f32 = jnp.float32
+    x, dt, b, c = (t.astype(f32) for t in (x, dt, b, c))
+    la = dt * a.astype(f32)[None, None, None, :]
+    cs = jnp.cumsum(la, axis=2)
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]
+    q = x.shape[2]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcthn,bcuhn->bctuh", c, b)
+    y = jnp.einsum("bctuh,bcuh,bcuhp->bcthp", cb * L, dt, x)
+    d_end = jnp.exp(cs[:, :, -1:, :] - cs)
+    st = jnp.einsum("bcuh,bcuh,bcuhn,bcuhp->bchpn", d_end, dt, b, x)
+    dc = jnp.exp(cs[:, :, -1, :])
+    return y.astype(x.dtype), st, dc

@@ -1,0 +1,96 @@
+"""Mamba2 SSD intra-chunk Pallas TPU kernel.
+
+Computes, per (batch, chunk, head-tile):
+  * the intra-chunk output  Y_intra = (C B^T ⊙ L) · (dt ⊙ X)
+  * the chunk summary state S_c     = Σ_u exp(cs_last - cs_u) dt_u B_u X_u
+  * the chunk decay         d_c     = exp(cs_last)
+
+The tiny sequential inter-chunk recurrence (S/chunk steps over (H,P,N)
+states) stays in JAX (``ops.ssd_chunked_pallas``) — it is O(S/Q) elementwise
+work and does not benefit from a kernel. Chunk length is the MXU-aligned
+tile (256 = 2x128); head tiles keep VMEM under budget:
+   x (Q,hb,P) + B/C (Q,hb,N) + L (Q,Q) fp32 ≈ 2–3 MB for hb=8.
+
+Oracle: ``ref.ssd_intra_ref`` (and end-to-end ``models.ssm.ssd_ref``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, st_ref, dc_ref):
+    # blocks: x (1,1,Q,hb,P); dt (1,1,Q,hb); a (hb,); b/c (1,1,Q,hb,N)
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, hb, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q, hb)
+    a = a_ref[...].astype(jnp.float32)           # (hb,)
+    bm = b_ref[0, 0].astype(jnp.float32)         # (Q, hb, N)
+    cm = c_ref[0, 0].astype(jnp.float32)         # (Q, hb, N)
+    q = x.shape[0]
+
+    la = dt * a[None, :]                         # (Q, hb) log-decay
+    cs = jnp.cumsum(la, axis=0)                  # inclusive
+    seg = cs[:, None, :] - cs[None, :, :]        # (Q_t, Q_u, hb)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(tri[:, :, None], jnp.exp(seg), 0.0)
+
+    # cb[t,u,h] = sum_n C[t,h,n] B[u,h,n]  -> batched over h
+    cb = jax.lax.dot_general(
+        cm.transpose(1, 0, 2), bm.transpose(1, 0, 2),
+        (((2,), (2,)), ((0,), (0,))))            # (hb, Q_t, Q_u)
+    w = cb * L.transpose(2, 0, 1)                # (hb, Q_t, Q_u)
+    xdt = x * dt[:, :, None]                     # (Q, hb, P)
+    y = jax.lax.dot_general(
+        w, xdt.transpose(1, 0, 2), (((2,), (1,)), ((0,), (0,))))
+    y_ref[0, 0] = y.transpose(1, 0, 2).astype(y_ref.dtype)  # (Q, hb, P)
+
+    d_end = jnp.exp(cs[-1, :][None, :] - cs)     # (Q, hb) decay to chunk end
+    wx = xdt * d_end[:, :, None]                 # (Q, hb, P)
+    st = jax.lax.dot_general(                    # (hb, P, N)
+        wx.transpose(1, 2, 0), bm.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))))
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+    dc_ref[0, 0] = jnp.exp(cs[-1, :]).astype(dc_ref.dtype)
+
+
+def ssd_intra(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+              c: jax.Array, *, head_block: int = 8,
+              interpret: bool = False
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x (B,NC,Q,H,P); dt (B,NC,Q,H); a (H,); b/c (B,NC,Q,H,N).
+    Returns (y_intra (B,NC,Q,H,P), states (B,NC,H,P,N), decay (B,NC,H))."""
+    bsz, nc, q, h, p = x.shape
+    n = b.shape[-1]
+    hb = min(head_block, h)
+    assert h % hb == 0, (h, hb)
+    grid = (bsz, nc, h // hb)
+
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, hb, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, hb), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((hb,), lambda bi, ci, hi: (hi,)),
+            pl.BlockSpec((1, 1, q, hb, n), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, hb, n), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, hb, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, hb, p, n), lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+            pl.BlockSpec((1, 1, hb), lambda bi, ci, hi: (bi, ci, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc, q, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, nc, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a, b, c)

@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh, prove the sharding config is coherent, and extract the
+roofline terms from the compiled artifact.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the dry-run needs 512 placeholder host devices to build
+the 16x16 (single-pod) and 2x16x16 (multi-pod) meshes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 cells
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig,
+                            get_config)
+from ..distributed import analytic, hlo_analysis, roofline
+from ..distributed.sharding import (ShardingRules, param_shardings,
+                                    use_rules, _fit_spec)
+from ..models.model import Model
+from ..models.params import split_params
+from ..optim.optimizer import OptimizerConfig
+from ..train.train_step import StepConfig, make_train_step
+from .mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if shape.kind == "train":
+        s_text = S - cfg.n_frontend_tokens if cfg.family == "vlm" else S
+        specs = {"tokens": jax.ShapeDtypeStruct((B, s_text), i32),
+                 "labels": jax.ShapeDtypeStruct((B, s_text), i32)}
+    elif shape.kind == "prefill":
+        s_text = S - cfg.n_frontend_tokens if cfg.family == "vlm" else S
+        specs = {"tokens": jax.ShapeDtypeStruct((B, s_text), i32)}
+    else:  # decode: one new token against a seq_len cache
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["patch_embed"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), bf16)
+    if cfg.family == "audio" and shape.kind != "decode":
+        specs["frame_embed"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), bf16)
+    return specs
+
+
+def _batch_shardings(rules: ShardingRules, specs: Dict[str, Any]):
+    out = {}
+    for k, v in specs.items():
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        spec = _fit_spec(rules.mesh, rules.act_spec(axes), v.shape)
+        out[k] = NamedSharding(rules.mesh, spec)
+    return out
+
+
+def _opt_state_axes(opt_name: str, param_axes: Any) -> Any:
+    if opt_name == "adamw":
+        return {"m": param_axes, "v": param_axes, "step": ()}
+    if opt_name == "adafactor":
+        def fact(axes):
+            if len(axes) >= 2:
+                return {"vr": tuple(axes[:-1]),
+                        "vc": tuple(axes[:-2]) + (axes[-1],)}
+            return {"v": tuple(axes)}
+        return {"v": jax.tree.map(fact, param_axes,
+                                  is_leaf=lambda x: isinstance(x, tuple)),
+                "step": ()}
+    raise ValueError(opt_name)
+
+
+def _tree_shardings(axes_tree: Any, abs_tree: Any):
+    return param_shardings(axes_tree, abs_tree)
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             opt_name: str = "adamw", remat: str = "full",
+             microbatches: int = 1, kv_chunk: int = 1024,
+             attn_block_skip: bool = False, compress_grads: bool = False,
+             zero_stage: int = 3, mesh_shape: Optional[Tuple[int, ...]] = None,
+             moe_cf: Optional[float] = None, kv_quant: bool = False,
+             seq_parallel: Optional[bool] = None,
+             save: bool = True, verbose: bool = True,
+             extra_tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch_id)
+    if moe_cf is not None and cfg.moe is not None:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=moe_cf))
+    shape = SHAPES[shape_name]
+    if mesh_shape is not None:
+        mesh_name = "x".join(str(s) for s in mesh_shape)
+    else:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+            "opt": opt_name, "remat": remat, "microbatches": microbatches,
+            "kv_chunk": kv_chunk, "tag": extra_tag}
+    if shape_name in cfg.skip_shapes:
+        cell.update(status="skipped",
+                    reason="documented skip (DESIGN.md Arch-applicability)")
+        return _finish(cell, save, verbose)
+
+    t0 = time.time()
+    try:
+        if mesh_shape is not None:
+            axes = ("pod", "data", "model")[-len(mesh_shape):]
+            mesh = jax.make_mesh(tuple(mesh_shape), axes)
+        else:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.size
+        rules = ShardingRules(mesh=mesh, seq_parallel=bool(seq_parallel),
+                              fsdp=(zero_stage == 3))
+        with use_rules(rules), mesh:
+            model = Model(cfg, dtype=jnp.bfloat16, kv_quant=kv_quant)
+            params_abs = model.abstract_params()
+            values_abs, axes = split_params(params_abs)
+            pshard = _tree_shardings(axes, values_abs)
+            specs = input_specs(cfg, shape)
+            bshard = _batch_shardings(rules, specs)
+
+            if shape.kind == "train":
+                opt_cfg = OptimizerConfig(name=opt_name)
+                step_cfg = StepConfig(remat=remat, microbatches=microbatches,
+                                      kv_chunk=kv_chunk)
+                init_state, train_step = make_train_step(model, opt_cfg,
+                                                         step_cfg)
+                state_abs = jax.eval_shape(init_state, values_abs)
+                opt_axes = _opt_state_axes(opt_name, axes)
+                state_shard = {"params": pshard,
+                               "opt": _tree_shardings(opt_axes,
+                                                      state_abs["opt"])}
+                fn = jax.jit(train_step,
+                             in_shardings=(state_shard, bshard),
+                             out_shardings=(state_shard, None),
+                             donate_argnums=(0,))
+                lowered = fn.lower(state_abs, specs)
+            elif shape.kind == "prefill":
+                fn = jax.jit(lambda p, b: model.prefill(p, b,
+                                                        kv_chunk=kv_chunk),
+                             in_shardings=(pshard, bshard))
+                lowered = fn.lower(values_abs, specs)
+            else:  # decode
+                cache_abs = model.abstract_cache(shape.global_batch,
+                                                 shape.seq_len)
+                cache_vals, cache_axes = split_params(cache_abs)
+                cshard = _tree_shardings(cache_axes, cache_vals)
+                fn = jax.jit(
+                    lambda p, c, t, cur: model.decode_step(p, c, t, cur),
+                    in_shardings=(pshard, cshard, bshard["tokens"],
+                                  NamedSharding(mesh, P())),
+                    out_shardings=(None, cshard),
+                    donate_argnums=(1,))
+                lowered = fn.lower(values_abs, cache_vals, specs["tokens"],
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            if verbose:
+                print(mem)
+                print({k: v for k, v in (cost or {}).items()
+                       if k in ("flops", "bytes accessed")})
+            hlo = compiled.as_text()
+            coll_total, coll_by_op, coll_counts = \
+                hlo_analysis.collective_bytes(hlo)
+
+        # XLA cost_analysis counts while-loop bodies ONCE (verified; see
+        # distributed/analytic.py) — record raw values for reference but
+        # drive the roofline from the calibrated analytic model.
+        flops_dev = float((cost or {}).get("flops", 0.0))
+        bytes_dev = float((cost or {}).get("bytes accessed", 0.0))
+        msize = mesh.shape.get("model", 1)
+        dsize = chips // msize
+        cm = analytic.cost(cfg, shape, chips=chips, model_shards=msize,
+                           data_shards=dsize, remat=remat, opt_name=opt_name,
+                           attn_block_skip=attn_block_skip,
+                           compress_grads=compress_grads,
+                           zero_stage=zero_stage, kv_quant=kv_quant)
+        mf = roofline.model_flops_for(cfg, shape)
+        rl = roofline.analyze(arch_id, shape_name, chips,
+                              hlo_flops=cm.flops,
+                              hlo_bytes=cm.hbm_bytes,
+                              coll_bytes=cm.coll_bytes,
+                              model_flops=mf)
+        cell["analytic_detail"] = {k: float(v) for k, v in cm.detail.items()}
+        cell["xla_flops_per_device_raw"] = flops_dev
+        cell["xla_bytes_per_device_raw"] = bytes_dev
+        mem_info = {}
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            mem_info[attr] = getattr(mem, attr, None)
+        temp = mem_info.get("temp_size_in_bytes") or 0
+        args_b = mem_info.get("argument_size_in_bytes") or 0
+        HBM = 16e9  # v5e
+        cell["fits_hbm"] = bool(args_b + temp <= HBM)
+        if shape.kind == "train" and not cell["fits_hbm"]:
+            # transients scale ~1/mb with gradient accumulation
+            need = max(1.0, temp / max(HBM - args_b, 1e9))
+            cell["suggested_microbatches"] = int(-(-need // 1))
+        cell.update(
+            status="ok", chips=chips,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+            collective_bytes_per_device=coll_total,
+            collective_by_op=coll_by_op, collective_counts=coll_counts,
+            memory_analysis=mem_info,
+            bytes_per_device_hbm=mem_info.get("temp_size_in_bytes"),
+            roofline=rl.to_dict(),
+        )
+    except Exception as ex:  # noqa: BLE001
+        cell.update(status="error", error=repr(ex),
+                    traceback=traceback.format_exc()[-4000:])
+    return _finish(cell, save, verbose)
+
+
+def _finish(cell: Dict[str, Any], save: bool, verbose: bool) -> Dict[str, Any]:
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        tag = f"_{cell['tag']}" if cell.get("tag") else ""
+        path = os.path.join(
+            RESULTS_DIR,
+            f"{cell['arch']}_{cell['shape']}_{cell['mesh']}"
+            f"_{cell['remat']}_{cell['opt']}{tag}.json")
+        with open(path, "w") as f:
+            json.dump(cell, f, indent=1)
+    if verbose:
+        rl = cell.get("roofline", {})
+        print(f"[{cell['status']:7s}] {cell['arch']:18s} {cell['shape']:12s} "
+              f"{cell['mesh']:8s} "
+              f"bottleneck={rl.get('bottleneck', '-'):10s} "
+              f"step={rl.get('step_time_s', 0):.4f}s "
+              f"mfu={rl.get('mfu', 0):.3f} "
+              f"compile={cell.get('compile_s', 0)}s"
+              + (f" err={cell.get('error', '')[:100]}"
+                 if cell["status"] == "error" else ""))
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", default="adamw")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--kv-chunk", type=int, default=1024)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    ok = True
+    for a in archs:
+        for s in shapes:
+            cell = run_cell(a, s, multi_pod=args.multi_pod, opt_name=args.opt,
+                            remat=args.remat, microbatches=args.microbatches,
+                            kv_chunk=args.kv_chunk, extra_tag=args.tag)
+            cells.append(cell)
+            ok &= cell["status"] != "error"
+    n_ok = sum(c["status"] == "ok" for c in cells)
+    n_skip = sum(c["status"] == "skipped" for c in cells)
+    n_err = len(cells) - n_ok - n_skip
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"/ {len(cells)} cells")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,806 @@
+"""Model builder: config -> init / loss_fn / prefill / decode_step.
+
+One code path per family:
+  * decoder LM (dense / moe / vlm)  — scan over stacked layers
+  * ssm LM (mamba2)                 — scan over stacked mamba blocks
+  * hybrid (zamba2)                 — mamba segments + one *shared*
+                                      attention+MLP block woven in
+  * enc-dec (whisper)               — encoder scan + decoder scan w/ cross
+
+Caches and params are trees of ``Param(value, logical_axes)`` so the same
+definitions serve CPU smoke tests (concrete, tiny) and the 512-device
+dry-run (abstract, exact-size).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import shard
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (attention, attn_out, attn_project_qkv,
+                     cross_attention_block, decode_attention_block,
+                     mlp_block, rmsnorm, self_attention_block)
+from .params import Initializer, Param, split_params
+
+INF_WINDOW = 1 << 30  # "no window" sentinel for per-layer window arrays
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+
+def _init_attn(ini: Initializer, cfg: ArchConfig, L: int) -> Dict[str, Param]:
+    D, H, Kv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": ini.normal((L, D, H, Dh), ("layers", "embed", "heads", None)),
+        "wk": ini.normal((L, D, Kv, Dh), ("layers", "embed", "kv_heads", None)),
+        "wv": ini.normal((L, D, Kv, Dh), ("layers", "embed", "kv_heads", None)),
+        "wo": ini.normal((L, H, Dh, D), ("layers", "heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ini.zeros((L, Dh), ("layers", None))
+        p["k_norm"] = ini.zeros((L, Dh), ("layers", None))
+    return p
+
+
+def _init_mlp(ini: Initializer, cfg: ArchConfig, L: int, ff: int
+              ) -> Dict[str, Param]:
+    D = cfg.d_model
+    p = {"w_up": ini.normal((L, D, ff), ("layers", "embed", "ff")),
+         "w_down": ini.normal((L, ff, D), ("layers", "ff", "embed"))}
+    if cfg.mlp_gated:
+        p["w_gate"] = ini.normal((L, D, ff), ("layers", "embed", "ff"))
+    return p
+
+
+def _init_moe(ini: Initializer, cfg: ArchConfig, L: int) -> Dict[str, Param]:
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.d_ff_expert
+    # Expert weights shard over the model axis by expert when E divides it
+    # (kimi: 384 experts); when it doesn't (mixtral: 8 experts on a 16-way
+    # axis), _fit_spec drops 'experts' and the trailing 'ff' annotation
+    # takes the model axis instead (duplicate-axis resolution keeps the
+    # first valid one).
+    p = {
+        "router": ini.normal((L, D, E), ("layers", "embed", "experts")),
+        "w_gate": ini.normal((L, E, D, F), ("layers", "experts", "embed", "ff")),
+        "w_up": ini.normal((L, E, D, F), ("layers", "experts", "embed", "ff")),
+        "w_down": ini.normal((L, E, F, D), ("layers", "experts", "ff", "embed")),
+    }
+    if m.n_shared_experts:
+        fs = m.d_ff_expert * m.n_shared_experts
+        p["ws_gate"] = ini.normal((L, D, fs), ("layers", "embed", "ff"))
+        p["ws_up"] = ini.normal((L, D, fs), ("layers", "embed", "ff"))
+        p["ws_down"] = ini.normal((L, fs, D), ("layers", "ff", "embed"))
+    return p
+
+
+def _init_mamba(ini: Initializer, cfg: ArchConfig, L: int) -> Dict[str, Param]:
+    s = cfg.ssm
+    D = cfg.d_model
+    inner = s.expand * D
+    nheads = inner // s.head_dim
+    gn = s.n_groups * s.d_state
+    conv_dim = inner + 2 * gn
+    return {
+        "w_in": ini.normal((L, D, 2 * inner + 2 * gn + nheads),
+                           ("layers", "embed", "ssm_inner")),
+        "conv_w": ini.normal((L, conv_dim, s.d_conv),
+                             ("layers", "ssm_inner", None), scale=0.5),
+        "A_log": ini.const(math.log(1.0), (L, nheads), ("layers", None),
+                           dtype=jnp.float32),
+        "D": ini.ones((L, nheads), ("layers", None)),
+        "dt_bias": ini.zeros((L, nheads), ("layers", None)),
+        "norm": ini.zeros((L, inner), ("layers", "ssm_inner")),
+        "w_out": ini.normal((L, inner, D), ("layers", "ssm_inner", "embed")),
+    }
+
+
+def _layer_cfg(cfg: ArchConfig, L: int, ini: Initializer) -> Dict[str, Any]:
+    """Stacked decoder blocks for dense/moe/vlm families."""
+    p: Dict[str, Any] = {
+        "ln1": ini.zeros((L, cfg.d_model), ("layers", None)),
+        "ln2": ini.zeros((L, cfg.d_model), ("layers", None)),
+        "attn": _init_attn(ini, cfg, L),
+    }
+    if cfg.moe is not None:
+        p["moe"] = _init_moe(ini, cfg, L)
+    else:
+        p["mlp"] = _init_mlp(ini, cfg, L, cfg.d_ff)
+    return p
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, dtype=jnp.bfloat16,
+                 unroll: bool = False, kv_quant: bool = False):
+        self.cfg = cfg
+        self.dtype = dtype
+        self.unroll = unroll  # python-loop layers (cost-model calibration)
+        self.kv_quant = kv_quant  # int8 KV caches (decode memory lever)
+        # pad vocab so the embedding/logits shard cleanly over the model
+        # axis (odd vocabs: whisper 51865, internvl2 92553, mamba2 50280)
+        self.vocab_pad = -(-cfg.vocab // 256) * 256
+
+    # -- init ------------------------------------------------------------------
+    def _init_tree(self, ini: Initializer) -> Dict[str, Any]:
+        cfg = self.cfg
+        L, D, V = cfg.n_layers, cfg.d_model, self.vocab_pad
+        p: Dict[str, Any] = {
+            "embed": ini.normal((V, D), ("vocab", "embed"), scale=1.0),
+            "final_norm": ini.zeros((D,), (None,)),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = ini.normal((D, V), ("embed", "vocab"))
+        if cfg.pos_embedding == "learned":
+            # sized to the largest supported decode context (32k shapes)
+            p["pos_embed"] = ini.normal((1 << 15, D), ("seq_cache", "embed"),
+                                        scale=0.02)
+        if cfg.family in ("dense", "moe", "vlm"):
+            p["layers"] = _layer_cfg(cfg, L, ini)
+        elif cfg.family == "ssm":
+            p["layers"] = {"ln1": ini.zeros((L, D), ("layers", None)),
+                           "mamba": _init_mamba(ini, cfg, L)}
+        elif cfg.family == "hybrid":
+            p["layers"] = {"ln1": ini.zeros((L, D), ("layers", None)),
+                           "mamba": _init_mamba(ini, cfg, L)}
+            p["shared"] = {  # ONE shared attention+MLP block (zamba2)
+                "ln1": ini.zeros((1, D), (None, None)),
+                "ln2": ini.zeros((1, D), (None, None)),
+                "attn": {k: v for k, v in _init_attn(ini, cfg, 1).items()},
+                "mlp": _init_mlp(ini, cfg, 1, cfg.d_ff),
+            }
+        elif cfg.family == "audio":
+            Le = cfg.n_enc_layers
+            p["enc_layers"] = {
+                "ln1": ini.zeros((Le, D), ("layers", None)),
+                "ln2": ini.zeros((Le, D), ("layers", None)),
+                "attn": _init_attn(ini, cfg, Le),
+                "mlp": _init_mlp(ini, cfg, Le, cfg.d_ff),
+            }
+            p["enc_pos"] = ini.normal((cfg.enc_seq, D), (None, "embed"),
+                                      scale=0.02)
+            p["layers"] = {
+                "ln1": ini.zeros((L, D), ("layers", None)),
+                "ln_x": ini.zeros((L, D), ("layers", None)),
+                "ln2": ini.zeros((L, D), ("layers", None)),
+                "attn": _init_attn(ini, cfg, L),
+                "cross": _init_attn(ini, cfg, L),
+                "mlp": _init_mlp(ini, cfg, L, cfg.d_ff),
+            }
+        else:
+            raise ValueError(cfg.family)
+        return p
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        return self._init_tree(Initializer(key, self.dtype))
+
+    def abstract_params(self) -> Dict[str, Any]:
+        return self._init_tree(Initializer(None, self.dtype, abstract=True))
+
+    # -- shared pieces -----------------------------------------------------------
+    def _window_array(self) -> jnp.ndarray:
+        cfg = self.cfg
+        L = cfg.n_layers
+        if cfg.local_global_pattern:  # gemma2: even layers local, odd global
+            w = [cfg.window if i % 2 == 0 else INF_WINDOW for i in range(L)]
+        elif cfg.window is not None and cfg.family != "hybrid":
+            w = [cfg.window] * L
+        else:
+            w = [INF_WINDOW] * L
+        return jnp.asarray(w, jnp.int32)
+
+    def _embed(self, params, tokens: jax.Array, pos0: Any = 0) -> jax.Array:
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(self.dtype)
+        if cfg.scale_embeddings:
+            x = x * math.sqrt(cfg.d_model)
+        if cfg.pos_embedding == "learned":
+            s = tokens.shape[1]
+            pe = jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], pos0, s, axis=0) if not isinstance(
+                    pos0, int) else params["pos_embed"][pos0:pos0 + s]
+            x = x + pe[None].astype(self.dtype)
+        return shard(x, "batch", "seq", "embed")
+
+    def _logits(self, params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head,
+                            preferred_element_type=jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+        if self.vocab_pad != cfg.vocab:  # mask pad region
+            pad_mask = jnp.arange(self.vocab_pad) >= cfg.vocab
+            logits = jnp.where(pad_mask, -1e30, logits)
+        return shard(logits, "batch", "seq", "vocab")
+
+    # -- forward: dense/moe/vlm decoder stack ------------------------------------
+    def _decoder_stack(self, params, x, positions, *, remat: str,
+                       kv_chunk: int):
+        cfg = self.cfg
+        windows = self._window_array()
+
+        def body(carry, xs):
+            x, aux_lb, aux_z = carry
+            lp, win = xs
+            h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+            h = self_attention_block(h, lp["attn"], cfg, positions=positions,
+                                     window=win, kv_chunk=kv_chunk)
+            x = x + h
+            h = rmsnorm(x, lp["ln2"], cfg.rmsnorm_eps)
+            if cfg.moe is not None:
+                h, aux = moe_lib.moe_block(h, lp["moe"], cfg)
+                aux_lb = aux_lb + aux["aux_lb"]
+                aux_z = aux_z + aux["aux_z"]
+            else:
+                h = mlp_block(h, lp["mlp"], cfg)
+            x = x + h
+            return (x, aux_lb, aux_z), None
+
+        body = _maybe_remat(body, remat)
+        carry = (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+        if self.unroll:
+            for i in range(cfg.n_layers):
+                carry, _ = body(carry, (jax.tree.map(lambda a: a[i],
+                                                     params["layers"]),
+                                        windows[i]))
+        else:
+            carry, _ = jax.lax.scan(body, carry,
+                                    (params["layers"], windows))
+        x, aux_lb, aux_z = carry
+        x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+        return x, {"aux_lb": aux_lb, "aux_z": aux_z}
+
+    # -- forward: ssm stack -------------------------------------------------------
+    def _ssm_stack(self, params, x, *, remat: str):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            x, = carry
+            h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+            h, _ = ssm_lib.mamba2_block(h, lp["mamba"], cfg)
+            return (x + h,), None
+
+        body = _maybe_remat(body, remat)
+        (x,), _ = jax.lax.scan(body, (x,), params["layers"])
+        x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+        return x, {}
+
+    # -- forward: hybrid (zamba2) ---------------------------------------------------
+    def _hybrid_stack(self, params, x, positions, *, remat: str,
+                      kv_chunk: int):
+        cfg = self.cfg
+        L, k = cfg.n_layers, cfg.hybrid_attn_every
+        n_seg, rem = divmod(L, k)
+
+        def seg_body(carry, lp):
+            x, = carry
+            h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+            h, _ = ssm_lib.mamba2_block(h, lp["mamba"], cfg)
+            return (x + h,), None
+
+        seg_body = _maybe_remat(seg_body, remat)
+        sp = params["shared"]
+
+        def shared_block(x):
+            h = rmsnorm(x, sp["ln1"][0], cfg.rmsnorm_eps)
+            h = self_attention_block(
+                h, jax.tree.map(lambda a: a[0], sp["attn"]), cfg,
+                positions=positions,
+                window=jnp.int32(cfg.window or INF_WINDOW),
+                kv_chunk=kv_chunk)
+            x = x + h
+            h = rmsnorm(x, sp["ln2"][0], cfg.rmsnorm_eps)
+            h = mlp_block(h, jax.tree.map(lambda a: a[0], sp["mlp"]), cfg)
+            return x + h
+
+        for seg in range(n_seg):
+            lp = jax.tree.map(lambda a: a[seg * k:(seg + 1) * k],
+                              params["layers"])
+            (x,), _ = jax.lax.scan(seg_body, (x,), lp)
+            x = shared_block(x)
+        if rem:
+            lp = jax.tree.map(lambda a: a[n_seg * k:], params["layers"])
+            (x,), _ = jax.lax.scan(seg_body, (x,), lp)
+        x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+        return x, {}
+
+    # -- forward: whisper enc-dec -----------------------------------------------------
+    def _encode(self, params, frames: jax.Array, *, remat: str):
+        cfg = self.cfg
+        x = frames.astype(self.dtype) + params["enc_pos"][None].astype(self.dtype)
+        x = shard(x, "batch", "seq", "embed")
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                               x.shape[:2])
+
+        def body(carry, lp):
+            x, = carry
+            h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+            q, k, v = attn_project_qkv(h, lp["attn"], cfg, pos)
+            o = attention(q, k, v, pos_q=pos, pos_k=pos, causal=False,
+                          window=None, softcap=None)
+            x = x + attn_out(o, lp["attn"])
+            h = rmsnorm(x, lp["ln2"], cfg.rmsnorm_eps)
+            x = x + mlp_block(h, lp["mlp"], cfg)
+            return (x,), None
+
+        body = _maybe_remat(body, remat)
+        (x,), _ = jax.lax.scan(body, (x,), params["enc_layers"])
+        return x
+
+    def _encdec_decoder(self, params, x, enc_out, positions, *, remat: str,
+                        kv_chunk: int):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            x, = carry
+            h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+            h = self_attention_block(h, lp["attn"], cfg, positions=positions,
+                                     window=jnp.int32(INF_WINDOW),
+                                     kv_chunk=kv_chunk)
+            x = x + h
+            h = rmsnorm(x, lp["ln_x"], cfg.rmsnorm_eps)
+            ek = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"])
+            ev = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"])
+            h = cross_attention_block(h, (ek, ev), lp["cross"], cfg,
+                                      positions=positions)
+            x = x + h
+            h = rmsnorm(x, lp["ln2"], cfg.rmsnorm_eps)
+            x = x + mlp_block(h, lp["mlp"], cfg)
+            return (x,), None
+
+        body = _maybe_remat(body, remat)
+        (x,), _ = jax.lax.scan(body, (x,), params["layers"])
+        x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+        return x, {}
+
+    # -- public API ------------------------------------------------------------------
+    def loss_fn(self, params, batch: Dict[str, jax.Array], *,
+                remat: str = "none", kv_chunk: int = 1024):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        n_front = 0
+        if cfg.family == "vlm":
+            pe = shard(batch["patch_embed"].astype(self.dtype),
+                       "batch", "seq", "embed")
+            x = jnp.concatenate([pe, x], axis=1)
+            n_front = pe.shape[1]
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
+        if cfg.family in ("dense", "moe", "vlm"):
+            x, aux = self._decoder_stack(params, x, positions, remat=remat,
+                                         kv_chunk=kv_chunk)
+        elif cfg.family == "ssm":
+            x, aux = self._ssm_stack(params, x, remat=remat)
+        elif cfg.family == "hybrid":
+            x, aux = self._hybrid_stack(params, x, positions, remat=remat,
+                                        kv_chunk=kv_chunk)
+        elif cfg.family == "audio":
+            enc_out = self._encode(params, batch["frame_embed"], remat=remat)
+            x, aux = self._encdec_decoder(params, x, enc_out, positions,
+                                          remat=remat, kv_chunk=kv_chunk)
+        else:
+            raise ValueError(cfg.family)
+        if n_front:
+            x = x[:, n_front:]
+        logits = self._logits(params, x)
+        loss = softmax_xent(logits, labels)
+        metrics = {"loss": loss}
+        if cfg.moe is not None:
+            loss = loss + 0.01 * aux["aux_lb"] / cfg.n_layers \
+                + 1e-3 * aux["aux_z"] / cfg.n_layers
+            metrics["aux_lb"] = aux["aux_lb"]
+        return loss, metrics
+
+    # -- caches -------------------------------------------------------------------
+    def cache_len(self, seq_len: int) -> int:
+        cfg = self.cfg
+        if cfg.window is not None and not cfg.local_global_pattern:
+            return min(cfg.window, seq_len)
+        return seq_len
+
+    def _cache_tree(self, ini: Initializer, batch: int, seq_len: int
+                    ) -> Dict[str, Any]:
+        cfg = self.cfg
+        L, Kv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        cl = self.cache_len(seq_len)
+        c: Dict[str, Any] = {}
+        if cfg.family in ("dense", "moe", "vlm"):
+            c["attn"] = _kv_cache(ini, L, batch, cl, Kv, Dh,
+                                  quant=self.kv_quant)
+        elif cfg.family == "ssm":
+            c["ssm"] = _ssm_cache(ini, cfg, L, batch)
+        elif cfg.family == "hybrid":
+            c["ssm"] = _ssm_cache(ini, cfg, L, batch)
+            n_apps = cfg.n_layers // cfg.hybrid_attn_every
+            wl = min(cfg.window or seq_len, seq_len)
+            c["shared_attn"] = _kv_cache(ini, n_apps, batch, wl, Kv, Dh,
+                                         quant=self.kv_quant)
+        elif cfg.family == "audio":
+            c["attn"] = _kv_cache(ini, L, batch, cl, Kv, Dh,
+                                  quant=self.kv_quant)
+            c["cross_k"] = ini.zeros((L, batch, cfg.enc_seq, Kv, Dh),
+                                     ("layers", "batch", None, "kv_heads", None))
+            c["cross_v"] = ini.zeros((L, batch, cfg.enc_seq, Kv, Dh),
+                                     ("layers", "batch", None, "kv_heads", None))
+        return c
+
+    def init_cache(self, batch: int, seq_len: int) -> Dict[str, Any]:
+        ini = Initializer(None, self.dtype)
+        ini.abstract = False
+        tree = self._cache_tree(Initializer(jax.random.PRNGKey(0), self.dtype),
+                                batch, seq_len)
+        # zero-init + pos = -1 sentinels
+        def fix(p: Param) -> Param:
+            if p.value.dtype == jnp.int32:
+                return Param(jnp.full(p.value.shape, -1, jnp.int32), p.axes)
+            return Param(jnp.zeros(p.value.shape, p.value.dtype), p.axes)
+        return jax.tree.map(fix, tree, is_leaf=lambda x: isinstance(x, Param))
+
+    def abstract_cache(self, batch: int, seq_len: int) -> Dict[str, Any]:
+        return self._cache_tree(Initializer(None, self.dtype, abstract=True),
+                                batch, seq_len)
+
+    # -- decode -------------------------------------------------------------------
+    def decode_step(self, params, cache, tokens: jax.Array, cur: jax.Array):
+        """One decode step. tokens (B,1); cur: scalar int32 position."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, pos0=cur)
+        windows = self._window_array()
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            def body(x, xs):
+                if cfg.family == "audio":
+                    lp, lc, win, ck, cv = xs
+                else:
+                    lp, lc, win = xs
+                h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+                h, new_c = decode_attention_block(
+                    h, lp["attn"], cfg, cache=lc, cur=cur, window=win)
+                x = x + h
+                if cfg.family == "audio":
+                    hq = rmsnorm(x, lp["ln_x"], cfg.rmsnorm_eps)
+                    pos_q = jnp.broadcast_to(cur, (x.shape[0], 1)).astype(jnp.int32)
+                    h = cross_attention_block(hq, (ck, cv), lp["cross"], cfg,
+                                              positions=pos_q)
+                    x = x + h
+                h = rmsnorm(x, lp["ln2"], cfg.rmsnorm_eps)
+                if cfg.moe is not None:
+                    h, _ = moe_lib.moe_block(h, lp["moe"], cfg)
+                else:
+                    h = mlp_block(h, lp["mlp"], cfg)
+                return x + h, new_c
+
+            if cfg.family == "audio":
+                xs = (params["layers"], cache["attn"], windows,
+                      cache["cross_k"], cache["cross_v"])
+            else:
+                xs = (params["layers"], cache["attn"], windows)
+            x, new_attn = jax.lax.scan(body, x, xs)
+            new_cache = dict(cache)
+            new_cache["attn"] = new_attn
+        elif cfg.family == "ssm":
+            def body(x, xs):
+                lp, lc = xs
+                h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+                h, (s_new, c_new) = ssm_lib.mamba2_block(
+                    h, lp["mamba"], cfg, ssm_state=lc["state"],
+                    conv_state=lc["conv"], decode=True)
+                return x + h, {"state": s_new, "conv": c_new}
+            x, new_ssm = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+            new_cache = dict(cache)
+            new_cache["ssm"] = new_ssm
+        elif cfg.family == "hybrid":
+            x, new_cache = self._hybrid_decode(params, cache, x, cur)
+        else:
+            raise ValueError(cfg.family)
+        x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+        logits = self._logits(params, x)
+        return logits, new_cache
+
+    def _hybrid_decode(self, params, cache, x, cur):
+        cfg = self.cfg
+        L, k = cfg.n_layers, cfg.hybrid_attn_every
+        n_seg, rem = divmod(L, k)
+        sp = params["shared"]
+
+        def seg_body(x, xs):
+            lp, lc = xs
+            h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+            h, (s_new, c_new) = ssm_lib.mamba2_block(
+                h, lp["mamba"], cfg, ssm_state=lc["state"],
+                conv_state=lc["conv"], decode=True)
+            return x + h, {"state": s_new, "conv": c_new}
+
+        new_ssm_parts = []
+        new_attn_parts = []
+        for seg in range(n_seg):
+            sl = lambda a: a[seg * k:(seg + 1) * k]
+            lp = jax.tree.map(sl, params["layers"])
+            lc = jax.tree.map(sl, cache["ssm"])
+            x, ssm_new = jax.lax.scan(seg_body, x, (lp, lc))
+            new_ssm_parts.append(ssm_new)
+            ac = jax.tree.map(lambda a: a[seg], cache["shared_attn"])
+            h = rmsnorm(x, sp["ln1"][0], cfg.rmsnorm_eps)
+            h, ac_new = decode_attention_block(
+                h, jax.tree.map(lambda a: a[0], sp["attn"]), cfg,
+                cache=ac, cur=cur,
+                window=jnp.int32(cfg.window or INF_WINDOW))
+            x = x + h
+            h = rmsnorm(x, sp["ln2"][0], cfg.rmsnorm_eps)
+            x = x + mlp_block(h, jax.tree.map(lambda a: a[0], sp["mlp"]), cfg)
+            new_attn_parts.append(ac_new)
+        if rem:
+            sl = lambda a: a[n_seg * k:]
+            lp = jax.tree.map(sl, params["layers"])
+            lc = jax.tree.map(sl, cache["ssm"])
+            x, ssm_new = jax.lax.scan(seg_body, x, (lp, lc))
+            new_ssm_parts.append(ssm_new)
+        new_cache = {
+            "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                *new_ssm_parts),
+            "shared_attn": jax.tree.map(lambda *xs: jnp.stack(xs, 0),
+                                        *new_attn_parts),
+        }
+        return x, new_cache
+
+    # -- prefill -------------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, jax.Array], *,
+                kv_chunk: int = 1024, extra_cache: int = 0):
+        """Full-sequence forward that also fills a decode cache. Returns
+        (last-token logits, cache). ``extra_cache`` reserves cache slots
+        for subsequent decode steps (serving path)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm":
+            pe = shard(batch["patch_embed"].astype(self.dtype),
+                       "batch", "seq", "embed")
+            x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        windows = self._window_array()
+        cl = self.cache_len(S)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def body(x, xs):
+                lp, win = xs
+                h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+                q, k, v = attn_project_qkv(h, lp["attn"], cfg, positions)
+                o = attention(q, k, v, pos_q=positions, pos_k=positions,
+                              causal=True, window=win,
+                              softcap=cfg.attn_softcap,
+                              scale=cfg.attn_logit_scale, kv_chunk=kv_chunk)
+                x = x + attn_out(o, lp["attn"])
+                h = rmsnorm(x, lp["ln2"], cfg.rmsnorm_eps)
+                if cfg.moe is not None:
+                    h, _ = moe_lib.moe_block(h, lp["moe"], cfg)
+                else:
+                    h = mlp_block(h, lp["mlp"], cfg)
+                return x + h, _collect_kv(
+                    k, v, cl, positions, self.dtype, self.kv_quant)
+            x, attn_cache = jax.lax.scan(body, x, (params["layers"], windows))
+            x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+            cache = {"attn": _pad_kv(attn_cache, extra_cache, cfg, S)}
+        elif cfg.family == "ssm":
+            def body(x, lp):
+                h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+                h, (s_new, c_new) = ssm_lib.mamba2_block(h, lp["mamba"], cfg)
+                return x + h, {"state": s_new, "conv": c_new}
+            x, ssm_cache = jax.lax.scan(body, x, params["layers"])
+            x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+            cache = {"ssm": ssm_cache}
+        elif cfg.family == "hybrid":
+            x, cache = self._hybrid_prefill(params, x, positions,
+                                            kv_chunk=kv_chunk)
+            cache["shared_attn"] = _pad_kv(cache["shared_attn"], extra_cache,
+                                           cfg, S)
+        elif cfg.family == "audio":
+            enc_out = self._encode(params, batch["frame_embed"], remat="none")
+            x, cache = self._encdec_prefill(params, x, enc_out, positions,
+                                            cl, kv_chunk=kv_chunk)
+            cache["attn"] = _pad_kv(cache["attn"], extra_cache, cfg, S)
+        else:
+            raise ValueError(cfg.family)
+        logits = self._logits(params, x[:, -1:])
+        return logits, cache
+
+    def _hybrid_prefill(self, params, x, positions, *, kv_chunk: int):
+        cfg = self.cfg
+        L, k = cfg.n_layers, cfg.hybrid_attn_every
+        n_seg, rem = divmod(L, k)
+        sp = params["shared"]
+        S = x.shape[1]
+        wl = min(cfg.window or S, S)
+
+        def seg_body(x, lp):
+            h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+            h, (s_new, c_new) = ssm_lib.mamba2_block(h, lp["mamba"], cfg)
+            return x + h, {"state": s_new, "conv": c_new}
+
+        ssm_parts, attn_parts = [], []
+        for seg in range(n_seg):
+            lp = jax.tree.map(lambda a: a[seg * k:(seg + 1) * k],
+                              params["layers"])
+            x, ssm_new = jax.lax.scan(seg_body, x, lp)
+            ssm_parts.append(ssm_new)
+            ap = jax.tree.map(lambda a: a[0], sp["attn"])
+            h = rmsnorm(x, sp["ln1"][0], cfg.rmsnorm_eps)
+            q, kk, vv = attn_project_qkv(h, ap, cfg, positions)
+            o = attention(q, kk, vv, pos_q=positions, pos_k=positions,
+                          causal=True,
+                          window=jnp.int32(cfg.window or INF_WINDOW),
+                          softcap=cfg.attn_softcap, kv_chunk=kv_chunk)
+            x = x + attn_out(o, ap)
+            h = rmsnorm(x, sp["ln2"][0], cfg.rmsnorm_eps)
+            x = x + mlp_block(h, jax.tree.map(lambda a: a[0], sp["mlp"]), cfg)
+            attn_parts.append(_collect_kv(kk, vv, wl, positions,
+                                          self.dtype, self.kv_quant))
+        if rem:
+            lp = jax.tree.map(lambda a: a[n_seg * k:], params["layers"])
+            x, ssm_new = jax.lax.scan(seg_body, x, lp)
+            ssm_parts.append(ssm_new)
+        x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+        cache = {
+            "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                *ssm_parts),
+            "shared_attn": jax.tree.map(lambda *xs: jnp.stack(xs, 0),
+                                        *attn_parts),
+        }
+        return x, cache
+
+    def _encdec_prefill(self, params, x, enc_out, positions, cl, *,
+                        kv_chunk: int):
+        cfg = self.cfg
+
+        def body(x, lp):
+            h = rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps)
+            q, kk, vv = attn_project_qkv(h, lp["attn"], cfg, positions)
+            o = attention(q, kk, vv, pos_q=positions, pos_k=positions,
+                          causal=True, window=None, softcap=None,
+                          kv_chunk=kv_chunk)
+            x = x + attn_out(o, lp["attn"])
+            h = rmsnorm(x, lp["ln_x"], cfg.rmsnorm_eps)
+            ek = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"])
+            ev = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"])
+            h = cross_attention_block(h, (ek, ev), lp["cross"], cfg,
+                                      positions=positions)
+            x = x + h
+            h = rmsnorm(x, lp["ln2"], cfg.rmsnorm_eps)
+            x = x + mlp_block(h, lp["mlp"], cfg)
+            cache_sl = _collect_kv(kk, vv, cl, positions, self.dtype,
+                                   self.kv_quant)
+            cache_sl["ck"] = ek.astype(self.dtype)
+            cache_sl["cv"] = ev.astype(self.dtype)
+            return x, cache_sl
+
+        x, layer_caches = jax.lax.scan(body, x, params["layers"])
+        x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+        attn = {k: v for k, v in layer_caches.items()
+                if k not in ("ck", "cv")}
+        cache = {"attn": attn,
+                 "cross_k": layer_caches["ck"],
+                 "cross_v": layer_caches["cv"]}
+        return x, cache
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _collect_kv(k, v, cl, positions, dtype, quant: bool):
+    """Prefill-path cache slice: last ``cl`` positions, optionally int8."""
+    from .layers import quantize_kv
+    out = {"pos": positions[0, -cl:].astype(jnp.int32)}
+    if quant:
+        kq, ks = quantize_kv(k[:, -cl:])
+        vq, vs = quantize_kv(v[:, -cl:])
+        out.update(k=kq, v=vq, k_scale=ks, v_scale=vs)
+    else:
+        out.update(k=k[:, -cl:].astype(dtype), v=v[:, -cl:].astype(dtype))
+    return out
+
+
+def _pad_kv(attn_cache: Dict[str, jax.Array], extra: int, cfg, S: int
+            ) -> Dict[str, jax.Array]:
+    """Right-pad prefilled KV caches with ``extra`` empty slots so decode
+    can append. No-op for ring-buffered (windowed) caches already at their
+    window size, and when extra == 0."""
+    if extra <= 0:
+        return attn_cache
+    cl = attn_cache["k"].shape[2]
+    if cfg.window is not None and not cfg.local_global_pattern:
+        if cl >= cfg.window:
+            return attn_cache  # true ring buffer: decode wraps via cur % W
+        extra = min(extra, cfg.window - cl)  # grow toward the window size
+    out = dict(attn_cache)
+    out["k"] = jnp.pad(attn_cache["k"],
+                       ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0)))
+    out["v"] = jnp.pad(attn_cache["v"],
+                       ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0)))
+    for s in ("k_scale", "v_scale"):
+        if s in attn_cache:
+            out[s] = jnp.pad(attn_cache[s],
+                             ((0, 0), (0, 0), (0, extra), (0, 0)))
+    out["pos"] = jnp.pad(attn_cache["pos"], ((0, 0), (0, extra)),
+                         constant_values=-1)
+    return out
+
+
+def _maybe_remat(body, remat: str):
+    if remat == "full":
+        return jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if remat == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+    return body
+
+
+def _kv_cache_axes(S: int, Kv: int):
+    """Shard the KV cache over the model axis by kv-heads when divisible,
+    else by the sequence dim (GQA decode with few kv heads)."""
+    from ..distributed.sharding import get_rules
+    rules = get_rules()
+    if rules is not None and rules.mesh is not None:
+        msize = rules.mesh.shape.get("model", 1)
+        if Kv % msize != 0 and S % msize == 0:
+            return ("layers", "batch", "seq_cache", None, None), "seq_cache"
+    return ("layers", "batch", None, "kv_heads", None), None
+
+
+def _kv_cache(ini: Initializer, L: int, B: int, S: int, Kv: int, Dh: int,
+              quant: bool = False) -> Dict[str, Param]:
+    axes, seq_rule = _kv_cache_axes(S, Kv)
+    def buf(shape, ax, dtype):
+        return Param(jax.ShapeDtypeStruct(shape, dtype) if ini.abstract
+                     else jnp.zeros(shape, dtype), ax)
+    kv_dtype = jnp.int8 if quant else ini.dtype
+    c = {
+        "k": buf((L, B, S, Kv, Dh), axes, kv_dtype),
+        "v": buf((L, B, S, Kv, Dh), axes, kv_dtype),
+        "pos": Param(jax.ShapeDtypeStruct((L, S), jnp.int32)
+                     if ini.abstract else jnp.full((L, S), -1, jnp.int32),
+                     ("layers", seq_rule)),
+    }
+    if quant:
+        c["k_scale"] = buf((L, B, S, Kv), axes[:-1], jnp.float32)
+        c["v_scale"] = buf((L, B, S, Kv), axes[:-1], jnp.float32)
+    return c
+
+
+def _ssm_cache(ini: Initializer, cfg: ArchConfig, L: int, B: int
+               ) -> Dict[str, Param]:
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    nheads = inner // s.head_dim
+    conv_dim = inner + 2 * s.n_groups * s.d_state
+    return {
+        "state": Param(
+            jax.ShapeDtypeStruct((L, B, nheads, s.head_dim, s.d_state),
+                                 jnp.float32) if ini.abstract else
+            jnp.zeros((L, B, nheads, s.head_dim, s.d_state), jnp.float32),
+            ("layers", "batch", "heads", None, None)),
+        "conv": ini.zeros((L, B, conv_dim, s.d_conv - 1),
+                          ("layers", "batch", "ssm_inner", None)),
+    }
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy; labels < 0 are masked out."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,77 @@
+"""Parameter declaration with logical sharding axes.
+
+``init`` functions build trees whose leaves are ``Param(value, axes)``;
+``split_params`` separates the value tree (what jit sees) from the logical
+axes tree (what ``distributed.sharding`` maps to mesh PartitionSpecs).
+Logical axis names: 'vocab', 'embed', 'heads', 'kv_heads', 'ff', 'experts',
+'layers', 'ssm_inner', None (replicated).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Param:
+    value: Any           # jnp array or ShapeDtypeStruct
+    axes: Tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.value.shape), (
+            f"axes {self.axes} vs shape {self.value.shape}")
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree: Any) -> Tuple[Any, Any]:
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+class Initializer:
+    """Deterministic param factory. With ``abstract=True`` produces
+    ShapeDtypeStructs (zero allocation — dry-run path)."""
+
+    def __init__(self, key: Optional[jax.Array], dtype=jnp.bfloat16,
+                 abstract: bool = False):
+        self.key = key
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def _next_key(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def normal(self, shape, axes, scale: Optional[float] = None) -> Param:
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        if scale is None:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / np.sqrt(fan_in)
+        v = (jax.random.normal(self._next_key(), tuple(shape), jnp.float32)
+             * scale).astype(self.dtype)
+        return Param(v, tuple(axes))
+
+    def zeros(self, shape, axes) -> Param:
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        return Param(jnp.zeros(tuple(shape), self.dtype), tuple(axes))
+
+    def ones(self, shape, axes) -> Param:
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        return Param(jnp.ones(tuple(shape), self.dtype), tuple(axes))
+
+    def const(self, value, shape, axes, dtype=None) -> Param:
+        dtype = dtype or self.dtype
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), dtype), tuple(axes))
+        return Param(jnp.full(tuple(shape), value, dtype), tuple(axes))

@@ -1,0 +1,220 @@
+"""Mamba2 SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD formulation: within a chunk of length Q the output is computed
+with dense matmuls (MXU-friendly); across chunks a sequential ``lax.scan``
+carries the (H, P, N) state. The Pallas kernel in
+``repro.kernels.ssd_scan`` implements the intra-chunk math for TPU and is
+validated against ``ssd_ref`` (naive recurrence) in tests.
+
+Shapes: x (B,S,H,P) head-split inner activations; dt (B,S,H); A (H,);
+B/C (B,S,G,N) with G groups broadcast over heads.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, D: Optional[jax.Array] = None,
+            init_state: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Naive sequential recurrence (the oracle).
+
+    h_t = exp(A dt_t) * h_{t-1} + dt_t * B_t x_t ;  y_t = C_t . h_t + D x_t
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(C, rep, axis=2)
+    decay = jnp.exp(A[None, None] * dt)  # (B,S,H)
+    state = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+             else init_state.astype(jnp.float32))
+
+    def step(state, xs):
+        xt, dtt, dct, Bt, Ct = xs
+        state = state * dct[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dtt, Bt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, state)
+        return state, y
+
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          decay.astype(jnp.float32).transpose(1, 0, 2),
+          Bh.astype(jnp.float32).transpose(1, 0, 2, 3),
+          Ch.astype(jnp.float32).transpose(1, 0, 2, 3))
+    state, y = jax.lax.scan(step, state, xs)
+    y = y.transpose(1, 0, 2, 3)
+    if D is not None:
+        y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, D: Optional[jax.Array] = None,
+                init_state: Optional[jax.Array] = None, chunk: int = 256
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD: matmul-rich intra-chunk term + scan over chunk states."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s_pad = s + pad
+    else:
+        s_pad = s
+    nc, q = s_pad // chunk, chunk
+    rep = h // g
+    f32 = jnp.float32
+
+    xc = x.astype(f32).reshape(b, nc, q, h, p)
+    dtc = dt.astype(f32).reshape(b, nc, q, h)
+    Bc = jnp.repeat(B, rep, axis=2).astype(f32).reshape(b, nc, q, h, n)
+    Cc = jnp.repeat(C, rep, axis=2).astype(f32).reshape(b, nc, q, h, n)
+
+    la = A[None, None, None] * dtc                      # log-decay (b,nc,q,h)
+    cs = jnp.cumsum(la, axis=2)                          # inclusive cumsum
+    # intra-chunk: y_t += C_t . sum_{u<=t} exp(cs_t - cs_u) dt_u B_u x_u
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]    # (b,nc,q_t,q_u,h)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcthn,bcuhn->bctuh", Cc, Bc)
+    y_intra = jnp.einsum("bctuh,bcuh,bcuhp->bcthp",
+                         cb * L, dtc, xc)
+
+    # chunk summary states: S_c = sum_u exp(cs_last - cs_u) dt_u B_u x_u
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)        # (b,nc,q,h)
+    chunk_states = jnp.einsum("bcuh,bcuh,bcuhn,bcuhp->bchpn",
+                              decay_to_end, dtc, Bc, xc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # (b,nc,h)
+
+    # inter-chunk recurrence over nc chunks (sequential, tiny)
+    state0 = (jnp.zeros((b, h, p, n), f32) if init_state is None
+              else init_state.astype(f32))
+
+    def step(carry, xs):
+        s_in = carry
+        st, dc = xs                                      # (b,h,p,n), (b,h)
+        s_out = s_in * dc[..., None, None] + st
+        return s_out, s_in                               # emit state *before*
+
+    final_state, prev_states = jax.lax.scan(
+        step, state0, (chunk_states.transpose(1, 0, 2, 3, 4),
+                       chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (b,nc,h,p,n)
+
+    # inter-chunk contribution: C_t . exp(cs_t) . state_entering_chunk
+    y_inter = jnp.einsum("bcthn,bcth,bchpn->bcthp",
+                         Cc, jnp.exp(cs), prev_states)
+    y = (y_intra + y_inter).reshape(b, s_pad, h, p)[:, :s]
+    if D is not None:
+        y = y + D[None, None, :, None] * x.astype(f32).reshape(
+            b, s_pad, h, p)[:, :s]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    A: jax.Array, B: jax.Array, C: jax.Array,
+                    D: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence. state (B,H,P,N); x (B,H,P); dt (B,H);
+    B/C (B,G,N). Returns (y (B,H,P), new_state)."""
+    h = x.shape[1]
+    rep = h // B.shape[1]
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(A[None] * dt.astype(jnp.float32))
+    state = state * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt.astype(jnp.float32), Bh,
+        x.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, state)
+    if D is not None:
+        y = y + D[None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(u: jax.Array, w: jax.Array,
+                  state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. u (B,S,Cdim); w (Cdim, Kw). Returns (y, new
+    conv state (B, Cdim, Kw-1))."""
+    bsz, s, cdim = u.shape
+    kw = w.shape[1]
+    if state is None:
+        state = jnp.zeros((bsz, cdim, kw - 1), u.dtype)
+    upad = jnp.concatenate([state.transpose(0, 2, 1), u], axis=1)
+    # (B, S+kw-1, Cdim) -> windows
+    y = jnp.zeros((bsz, s, cdim), jnp.float32)
+    for i in range(kw):
+        y = y + upad[:, i:i + s].astype(jnp.float32) \
+            * w[:, i].astype(jnp.float32)
+    new_state = upad[:, -(kw - 1):].transpose(0, 2, 1) if kw > 1 else state
+    return jax.nn.silu(y).astype(u.dtype), new_state
+
+
+def mamba2_block(x: jax.Array, p: Dict[str, jax.Array], cfg, *,
+                 ssm_state: Optional[jax.Array] = None,
+                 conv_state: Optional[jax.Array] = None,
+                 decode: bool = False):
+    """x (B,S,D). Params: w_in (D, 2*I+2*G*N+H), conv_w (I+2GN, Kw),
+    A_log (H,), D (H,), dt_bias (H,), norm (I,), w_out (I, D).
+
+    Returns (y (B,S,D), (new_ssm_state, new_conv_state))."""
+    s = cfg.ssm
+    bsz, slen, d = x.shape
+    inner = s.expand * d
+    nheads = inner // s.head_dim
+    gn = s.n_groups * s.d_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [inner, 2 * inner + 2 * gn], axis=-1)
+    xbc = shard(xbc, "batch", "seq", "ssm_inner")
+    z = shard(z, "batch", "seq", "ssm_inner")
+
+    if decode:
+        y_conv, conv_state = _conv_step(xbc[:, 0], p["conv_w"], conv_state)
+        y_conv = y_conv[:, None]
+    else:
+        y_conv, conv_state = causal_conv1d(xbc, p["conv_w"], conv_state)
+    xs, B, C = jnp.split(y_conv, [inner, inner + gn], axis=-1)
+    xs = xs.reshape(bsz, slen, nheads, s.head_dim)
+    B = B.reshape(bsz, slen, s.n_groups, s.d_state)
+    C = C.reshape(bsz, slen, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if decode:
+        y1, ssm_state = ssd_decode_step(
+            ssm_state, xs[:, 0], dt[:, 0], A, B[:, 0], C[:, 0], p["D"])
+        y1 = y1[:, None]
+    else:
+        y1, ssm_state = ssd_chunked(xs, dt, A, B, C, p["D"],
+                                    init_state=ssm_state, chunk=s.chunk)
+    y1 = y1.reshape(bsz, slen, inner)
+    # gated RMSNorm (mamba2's norm-before-out-proj, gated by z)
+    from .layers import rmsnorm
+    y1 = rmsnorm(y1 * jax.nn.silu(z), p["norm"], cfg.rmsnorm_eps)
+    y = jnp.einsum("bsi,id->bsd", y1, p["w_out"])
+    return shard(y, "batch", "seq", "embed"), (ssm_state, conv_state)
+
+
+def _conv_step(u_t: jax.Array, w: jax.Array, state: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token depthwise conv. u_t (B,Cdim); state (B,Cdim,Kw-1)."""
+    kw = w.shape[1]
+    full = jnp.concatenate([state, u_t[..., None]], axis=-1)  # (B,Cdim,Kw)
+    y = (full.astype(jnp.float32) * w[None].astype(jnp.float32)).sum(-1)
+    return jax.nn.silu(y).astype(u_t.dtype), full[..., 1:] if kw > 1 else state

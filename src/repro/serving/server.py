@@ -1,0 +1,117 @@
+"""LogAct-governed serving: batched generation requests through the
+Intent -> Vote -> Commit -> Execute machinery.
+
+Requests arrive as ``Mail`` entries; the ServePlanner batches pending
+requests into a ``serve_batch`` intention (so the batch composition itself
+is visible and stoppable before any compute runs); the Executor owns the
+jitted prefill/decode steps and appends per-request outputs as the Result.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core.agent import LogActAgent
+from ..core.driver import Planner
+from ..models.model import Model
+from ..models.params import split_params
+
+
+@dataclass
+class ServeEnv:
+    model: Model
+    params: Any = None
+    max_new_tokens: int = 16
+    prefill_fn: Any = None
+    decode_fn: Any = None
+
+    def ensure_initialized(self, seed: int = 0) -> None:
+        if self.params is None:
+            values, _ = split_params(self.model.init(jax.random.PRNGKey(seed)))
+            self.params = values
+        if self.prefill_fn is None:
+            self.prefill_fn = jax.jit(
+                self.model.prefill,
+                static_argnames=("kv_chunk", "extra_cache"))
+            self.decode_fn = jax.jit(self.model.decode_step)
+
+
+def h_serve_batch(args: Dict[str, Any], env: ServeEnv) -> Dict[str, Any]:
+    env.ensure_initialized()
+    prompts = [np.asarray(p, np.int32) for p in args["prompts"]]
+    new_tokens = int(args.get("max_new_tokens", env.max_new_tokens))
+    plen = max(len(p) for p in prompts)
+    bsz = len(prompts)
+    toks = np.zeros((bsz, plen), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, plen - len(p):] = p  # left-pad
+    batch = {"tokens": jnp.asarray(toks)}
+    cfg = env.model.cfg
+    if cfg.family == "audio":  # stubbed modality frontend (DESIGN.md)
+        batch["frame_embed"] = jnp.zeros((bsz, cfg.enc_seq, cfg.d_model),
+                                         jnp.float32)
+    if cfg.family == "vlm":
+        batch["patch_embed"] = jnp.zeros(
+            (bsz, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    logits, cache = env.prefill_fn(env.params, batch,
+                                   extra_cache=new_tokens)
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out.append(np.asarray(tok))
+    # position of the first decoded token = total prefilled length
+    # (vlm prefixes patch tokens ahead of the text)
+    pos0 = plen + (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+    for t in range(new_tokens - 1):
+        logits, cache = env.decode_fn(env.params, cache, tok,
+                                      jnp.int32(pos0 + t))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(tok))
+    gen = np.concatenate(out, axis=1)
+    return {"generated": gen.tolist(), "batch": bsz,
+            "prefill_len": plen, "new_tokens": new_tokens}
+
+
+SERVE_HANDLERS = {"serve_batch": h_serve_batch}
+
+
+class ServePlanner(Planner):
+    """Batches all pending request mail into one serve_batch intention."""
+
+    def __init__(self, max_batch: int = 8):
+        self.max_batch = max_batch
+        self.served: int = 0
+
+    def propose(self, context: Dict[str, Any]) -> Dict[str, Any]:
+        pending: List[Dict[str, Any]] = []
+        for m in context.get("mail", []):
+            if "prompt_tokens" in m:
+                pending.append(m)
+        # also pick up requests that arrived while we were executing
+        for h in context.get("history", []):
+            if h.get("role") == "mail" and "prompt_tokens" in h["body"] \
+                    and not h["body"].get("_served"):
+                pending.append(h["body"])
+        if not pending:
+            return {"done": True, "note": "queue empty"}
+        batch = pending[: self.max_batch]
+        for b in batch:
+            b["_served"] = True
+        self.served += len(batch)
+        return {"intent": {"kind": "serve_batch",
+                           "args": {"prompts": [b["prompt_tokens"]
+                                                for b in batch]}},
+                "note": f"serving batch of {len(batch)}"}
+
+
+def build_serving_agent(cfg: ArchConfig, *, bus=None, voters=(),
+                        max_batch: int = 8,
+                        agent_id: str = "server") -> LogActAgent:
+    env = ServeEnv(model=Model(cfg, dtype=jnp.float32))
+    return LogActAgent(bus=bus, planner=ServePlanner(max_batch), env=env,
+                       handlers=SERVE_HANDLERS, voters=list(voters),
+                       agent_id=agent_id)

@@ -1,0 +1,110 @@
+"""Log-anchored checkpointing (paper §3.2 snapshot store, applied to the
+training environment).
+
+A checkpoint records (params, optimizer state, data cursor, step) plus the
+**AgentBus position** it corresponds to, so recovery = load latest
+checkpoint + replay the log suffix. Integrity: every array file carries a
+checksum; ``verify`` is what the rule-voter's checkpoint-integrity
+precondition calls before a ``restore`` intention is approved.
+
+Format: one .npz per pytree (flattened paths), plus a JSON manifest.
+Writes are atomic (tmp + rename) and the manifest is written last, so a
+crash mid-write never yields a checkpoint that ``latest()`` would return.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(tree: Any, flat: Dict[str, np.ndarray]) -> Any:
+    paths = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in paths[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(paths[1], leaves)
+
+
+class CheckpointStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step-{step:010d}")
+
+    def save(self, step: int, state: Any, *, log_position: int,
+             data_cursor: int, extra: Optional[Dict[str, Any]] = None) -> str:
+        d = self._dir(step)
+        tmp = d + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        flat = _flatten(state)
+        np.savez(os.path.join(tmp, "state.npz"), **flat)
+        with open(os.path.join(tmp, "state.npz"), "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        manifest = {"step": step, "log_position": log_position,
+                    "data_cursor": data_cursor, "sha256": digest,
+                    "time": time.time(), "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(d):
+            os.rename(d, d + f".old-{time.time_ns()}")
+        os.rename(tmp, d)
+        return d
+
+    def list_steps(self) -> List[int]:
+        out = []
+        for n in os.listdir(self.root):
+            if not (n.startswith("step-") and n[5:].isdigit()):
+                continue  # skips .tmp / .old-* / .deleted-* variants
+            if os.path.exists(os.path.join(self.root, n, "manifest.json")):
+                out.append(int(n[5:]))
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def manifest(self, step: int) -> Dict[str, Any]:
+        with open(os.path.join(self._dir(step), "manifest.json")) as f:
+            return json.load(f)
+
+    def verify(self, step: int) -> bool:
+        """Checksum integrity check (rule-voter precondition)."""
+        try:
+            man = self.manifest(step)
+            with open(os.path.join(self._dir(step), "state.npz"), "rb") as f:
+                return hashlib.sha256(f.read()).hexdigest() == man["sha256"]
+        except (FileNotFoundError, json.JSONDecodeError, KeyError):
+            return False
+
+    def restore(self, step: int, like: Any) -> Tuple[Any, Dict[str, Any]]:
+        assert self.verify(step), f"checkpoint {step} failed integrity check"
+        man = self.manifest(step)
+        flat = dict(np.load(os.path.join(self._dir(step), "state.npz")))
+        return _unflatten_into(like, flat), man
+
+    def delete(self, step: int, pinned: bool = False) -> None:
+        if pinned:
+            raise PermissionError("refusing to delete a pinned checkpoint")
+        d = self._dir(step)
+        os.rename(d, d + f".deleted-{time.time_ns()}")

@@ -1,0 +1,96 @@
+"""Jitted train / serve step builders.
+
+``make_train_step`` returns a pjit-able ``train_step(state, batch) ->
+(state, metrics)`` with:
+  * microbatch gradient accumulation (``lax.scan`` over microbatches);
+  * configurable remat policy on the layer scan;
+  * optional int8+error-feedback gradient compression before the
+    cross-replica reduction;
+  * AdamW or Adafactor update.
+
+``make_serve_steps`` returns ``(prefill_step, decode_step)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.model import Model
+from ..optim import compression
+from ..optim.optimizer import OptimizerConfig, make_optimizer
+
+
+@dataclass(frozen=True)
+class StepConfig:
+    remat: str = "full"            # none | dots | full
+    microbatches: int = 1
+    kv_chunk: int = 1024
+    compress_grads: bool = False
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig,
+                    step_cfg: StepConfig):
+    opt_init, opt_update = make_optimizer(opt_cfg)
+    mb = step_cfg.microbatches
+
+    def init_state(params):
+        state = {"params": params, "opt": opt_init(params)}
+        if step_cfg.compress_grads:
+            state["ef"] = compression.ef_init(params)
+        return state
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, remat=step_cfg.remat,
+                             kv_chunk=step_cfg.kv_chunk)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(mb, b // mb, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), ms = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss / mb
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        new_state = dict(state)
+        if step_cfg.compress_grads:
+            grads, new_state["ef"] = compression.compress_grads(
+                grads, state["ef"])
+        new_params, new_opt, opt_metrics = opt_update(
+            params, grads, state["opt"])
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return new_state, metrics
+
+    return init_state, train_step
+
+
+def make_serve_steps(model: Model, kv_chunk: int = 1024):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, kv_chunk=kv_chunk)
+
+    def decode_step(params, cache, tokens, cur):
+        return model.decode_step(params, cache, tokens, cur)
+
+    return prefill_step, decode_step

@@ -1,0 +1,149 @@
+"""AgentBus backends: API contract, linearizability, typed poll, ACL."""
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import entries as E
+from repro.core.acl import AclError, BusClient
+from repro.core.bus import KvBus, MemoryBus, SqliteBus, make_bus
+from repro.core.entries import PayloadType
+
+
+def backends(tmp_path):
+    return [
+        MemoryBus(),
+        SqliteBus(str(tmp_path / "bus.db")),
+        KvBus(str(tmp_path / "kv")),
+    ]
+
+
+def test_append_read_tail(tmp_path):
+    for bus in backends(tmp_path):
+        assert bus.tail() == 0
+        p0 = bus.append(E.mail("hello"))
+        p1 = bus.append(E.intent("train_chunk", {"steps": 4}, "d1"))
+        assert (p0, p1) == (0, 1)
+        assert bus.tail() == 2
+        es = bus.read(0)
+        assert [e.position for e in es] == [0, 1]
+        assert es[0].type == PayloadType.MAIL
+        assert es[1].body["kind"] == "train_chunk"
+        # range read
+        assert [e.position for e in bus.read(1, 2)] == [1]
+        assert bus.read(5) == []
+
+
+def test_poll_type_filter(tmp_path):
+    for bus in backends(tmp_path):
+        bus.append(E.mail("x"))
+        bus.append(E.vote("i1", "rule", "v1", True))
+        got = bus.poll(0, [PayloadType.VOTE], timeout=1.0)
+        assert len(got) == 1 and got[0].type == PayloadType.VOTE
+        assert bus.poll(bus.tail(), [PayloadType.COMMIT], timeout=0.05) == []
+
+
+def test_poll_blocking_wakeup(tmp_path):
+    for bus in backends(tmp_path):
+        out = {}
+
+        def waiter():
+            out["got"] = bus.poll(0, [PayloadType.COMMIT], timeout=5.0)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        bus.append(E.mail("noise"))
+        bus.append(E.commit("i1", "dec"))
+        t.join(timeout=5.0)
+        assert not t.is_alive()
+        assert out["got"][0].body["intent_id"] == "i1"
+
+
+def test_concurrent_appends_linearizable(tmp_path):
+    for bus in backends(tmp_path):
+        n_threads, per = 8, 20
+
+        def worker(k):
+            for i in range(per):
+                bus.append(E.mail(f"{k}-{i}", sender=f"t{k}"))
+
+        ts = [threading.Thread(target=worker, args=(k,))
+              for k in range(n_threads)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        es = bus.read(0)
+        assert len(es) == n_threads * per
+        # dense unique positions in order
+        assert [e.position for e in es] == list(range(n_threads * per))
+        # every append present exactly once
+        texts = {e.body["text"] for e in es}
+        assert len(texts) == n_threads * per
+
+
+def test_durability_sqlite(tmp_path):
+    path = str(tmp_path / "dur.db")
+    bus = SqliteBus(path)
+    bus.append(E.mail("survive"))
+    bus.close()
+    bus2 = SqliteBus(path)
+    assert bus2.tail() == 1
+    assert bus2.read(0)[0].body["text"] == "survive"
+
+
+def test_durability_kv(tmp_path):
+    root = str(tmp_path / "kvdur")
+    bus = KvBus(root)
+    bus.append(E.mail("survive"))
+    bus2 = KvBus(root)
+    assert bus2.tail() == 1
+    assert bus2.read(0)[0].body["text"] == "survive"
+
+
+def test_acl_blocks_executor_escalation(tmp_path):
+    bus = MemoryBus()
+    ex = BusClient(bus, "executor-1", "executor")
+    # Case-3 prevention: executor cannot append votes/commits/policy
+    for payload in (E.vote("i", "rule", "x", True), E.commit("i", "x"),
+                    E.policy("decider", {"mode": "on_by_default"})):
+        with pytest.raises(AclError):
+            ex.append(payload)
+    # but results and mail are allowed
+    ex.append(E.result("i", True, {}, "executor-1"))
+    ex.append(E.mail("to another agent", sender="executor-1"))
+    # voter may vote but not commit
+    vt = BusClient(bus, "voter-1", "voter")
+    vt.append(E.vote("i", "rule", "voter-1", False))
+    with pytest.raises(AclError):
+        vt.append(E.commit("i", "voter-1"))
+    # executor read filter hides votes
+    assert all(e.type != PayloadType.VOTE for e in ex.read(0))
+    with pytest.raises(AclError):
+        ex.poll(0, [PayloadType.VOTE], timeout=0.01)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from(["Mail", "Intent", "Vote", "Commit",
+                                 "Result"]), min_size=1, max_size=30))
+def test_typed_read_matches_filter(types):
+    bus = MemoryBus()
+    mk = {"Mail": lambda: E.mail("m"),
+          "Intent": lambda: E.intent("k", {}, "d"),
+          "Vote": lambda: E.vote("i", "rule", "v", True),
+          "Commit": lambda: E.commit("i", "d"),
+          "Result": lambda: E.result("i", True, {}, "x")}
+    for t in types:
+        bus.append(mk[t]())
+    for t in set(types):
+        pt = PayloadType(t)
+        got = bus.read_type(pt)
+        assert len(got) == types.count(t)
+        assert all(e.type == pt for e in got)
+
+
+def test_make_bus_factory(tmp_path):
+    assert isinstance(make_bus("memory"), MemoryBus)
+    assert isinstance(make_bus("sqlite", path=str(tmp_path / "x.db")),
+                      SqliteBus)
+    assert isinstance(make_bus("kv", path=str(tmp_path / "kv2")), KvBus)
+    with pytest.raises(ValueError):
+        make_bus("bogus")

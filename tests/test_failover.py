@@ -1,0 +1,144 @@
+"""Automatic failover + multi-agent mailbox coordination (paper §3, §3.2)."""
+import time
+
+import pytest
+
+from repro.configs.base import get_config, smoke
+from repro.core import entries as E
+from repro.core.acl import BusClient
+from repro.core.agent import LogActAgent
+from repro.core.bus import MemoryBus
+from repro.core.driver import ScriptPlanner
+from repro.core.failover import ElasticWorkerPool, StandbyExecutor
+from repro.core.introspect import trace_intents
+from repro.core.kernel import AgentKernel, register_image
+from repro.data.pipeline import DataConfig
+from repro.optim.optimizer import OptimizerConfig
+from repro.train.train_step import StepConfig
+from repro.train.trainer import (InjectedCrash, TRAIN_HANDLERS, build_env,
+                                 build_training_agent)
+
+
+def test_standby_takes_over_after_crash(tmp_path):
+    """Executor dies mid-chunk; StandbyExecutor detects the committed-but-
+    unexecuted intention and takes over automatically; training completes."""
+    cfg = smoke(get_config("qwen3_4b"))
+    env = build_env(cfg, OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                         total_steps=8),
+                    StepConfig(remat="none"),
+                    DataConfig(cfg.vocab, 16, 4), str(tmp_path))
+    bus = MemoryBus()
+    agent = build_training_agent(env, total_steps=8, steps_per_intention=4,
+                                 ckpt_every=100, bus=bus)
+    env.crash_after_steps = 6
+    agent.send_mail("train")
+    with pytest.raises(InjectedCrash):
+        agent.run_until_idle(max_rounds=10000)
+    assert env.step == 6
+
+    # fake time so the takeover timeout elapses instantly
+    future = time.time() + 1000
+    standby = StandbyExecutor(bus, env, TRAIN_HANDLERS,
+                              takeover_timeout=5.0, clock=lambda: future)
+    # primary is dead; replace the agent's executor with the standby in the
+    # scheduler loop (the standby only acts once its check() fires)
+    agent.executor = standby
+    agent.run_until_idle(max_rounds=10000)
+    assert standby.active is not None
+    assert "no result" in standby.takeover_reason
+    assert env.step == 8
+
+
+def test_standby_stays_passive_when_healthy(tmp_path):
+    cfg = smoke(get_config("chatglm3_6b"))
+    env = build_env(cfg, OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                         total_steps=4),
+                    StepConfig(remat="none"),
+                    DataConfig(cfg.vocab, 16, 4), str(tmp_path))
+    bus = MemoryBus()
+    agent = build_training_agent(env, total_steps=4, steps_per_intention=4,
+                                 ckpt_every=100, bus=bus)
+    standby = StandbyExecutor(bus, env, TRAIN_HANDLERS, takeover_timeout=60)
+    agent.send_mail("train")
+    agent.run_until_idle(max_rounds=10000)
+    standby.maybe_take_over()
+    assert standby.active is None  # healthy primary: no takeover
+    assert env.step == 4
+
+
+@register_image("flaky-worker")
+def _flaky_image(bus, snapshot_store=None, fail=False, **kw):
+    def work(args, e):
+        if fail:
+            raise RuntimeError("bad node")
+        return {"done": 1}
+    plans = [{"intent": {"kind": "work", "args": {}}}] * 3 + [{"done": True}]
+    return LogActAgent(bus=bus, planner=ScriptPlanner(plans), env={},
+                       handlers={"work": work})
+
+
+def test_elastic_pool_replaces_failing_worker():
+    kern = AgentKernel()
+    pool = ElasticWorkerPool(kern, image="flaky-worker",
+                             image_kw_fn=lambda i: {"fail": i == 1})
+    pool.scale_to(3)
+    for name in kern.list_buses():
+        kern.get(name).bus.append(E.mail("go"))
+    for _ in range(60):
+        kern.tick_all()
+    actions = pool.sweep()
+    replaced = [k for k, v in actions.items() if v.startswith("replaced_by")]
+    assert len(replaced) == 1 and "worker-0-1" in replaced[0]
+    # the replacement bus exists and is a live agent
+    repl = pool.replaced[replaced[0]]
+    assert repl in kern.list_buses()
+
+
+def test_cross_agent_mailbox_coordination():
+    """Paper §3: an agent's Executing stage can mail ANOTHER agent's bus —
+    orchestrator delegates a task to a worker purely via typed mail."""
+    worker_bus = MemoryBus()
+
+    def w_work(args, e):
+        e["did"] = args["payload"]
+        return {"done": True}
+
+    worker = LogActAgent(
+        bus=worker_bus,
+        planner=_DelegatedPlanner(), env={}, handlers={"work": w_work},
+        agent_id="worker")
+
+    # orchestrator's executor handler appends mail to the worker's bus
+    # (executor role MAY append Mail — paper Table 2)
+    def delegate(args, env):
+        BusClient(worker_bus, "orch-executor", "executor").append(
+            E.mail("do the thing", sender="orchestrator",
+                   task={"payload": args["payload"]}))
+        return {"delegated": True}
+
+    orch = LogActAgent(
+        bus=MemoryBus(),
+        planner=ScriptPlanner([
+            {"intent": {"kind": "delegate", "args": {"payload": 42}}},
+            {"done": True}]),
+        env={}, handlers={"delegate": delegate}, agent_id="orch")
+    orch.send_mail("delegate the work")
+    orch.run_until_idle(max_rounds=1000)
+    worker.run_until_idle(max_rounds=1000)
+    assert worker.executor.env["did"] == 42
+    ts = trace_intents(worker_bus.read(0))
+    assert ts and ts[0].kind == "work" and ts[0].result["ok"]
+
+
+class _DelegatedPlanner(ScriptPlanner):
+    """Turns incoming task mail into a work intent."""
+
+    def __init__(self):
+        super().__init__([])
+
+    def propose(self, context):
+        for m in context.get("mail", []):
+            if "task" in m:
+                return {"intent": {"kind": "work",
+                                   "args": {"payload": m["task"]["payload"]}}}
+        return {"done": True}

@@ -1,0 +1,160 @@
+"""Property-based tests of the LogAct state-machine invariants, driven by
+randomly generated plans, policies, and voter behaviors (hypothesis).
+
+Invariants checked after every run (paper §3 / §3.1 / §3.2):
+  I1  at most one in-flight intention at any log prefix;
+  I2  every executed Result has exactly one earlier Commit for its intent;
+  I3  every Commit/Abort decision is unique per intent and consistent
+      with the votes on the log under the policy in force at intent time;
+  I4  aborted intents never execute (no Result);
+  I5  log positions are dense and strictly ordered;
+  I6  the executor never runs an intent twice (at-most-once), even with a
+      duplicate Decider appending redundant commits.
+"""
+from collections import defaultdict
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import entries as E
+from repro.core.acl import BusClient
+from repro.core.agent import LogActAgent
+from repro.core.bus import MemoryBus
+from repro.core.decider import Decider
+from repro.core.driver import ScriptPlanner
+from repro.core.entries import PayloadType
+from repro.core.voter import RuleVoter, VoteDecision
+
+KINDS = ["alpha", "beta", "gamma"]
+
+
+def check_invariants(bus, env, policy_mode):
+    entries = bus.read(0)
+    # I5: dense, ordered positions
+    assert [e.position for e in entries] == list(range(len(entries)))
+
+    commits = defaultdict(list)
+    aborts = defaultdict(list)
+    results = defaultdict(list)
+    votes = defaultdict(list)
+    inflight = 0
+    for e in entries:
+        b = e.body
+        if e.type == PayloadType.INTENT:
+            inflight += 1
+            assert inflight <= 1, "I1: two in-flight intentions"
+        elif e.type == PayloadType.VOTE:
+            votes[b["intent_id"]].append(b)
+        elif e.type == PayloadType.COMMIT:
+            commits[b["intent_id"]].append(e.position)
+        elif e.type == PayloadType.ABORT:
+            aborts[b["intent_id"]].append(e.position)
+            inflight -= 1
+        elif e.type == PayloadType.RESULT and not b.get("recovered"):
+            results[b["intent_id"]].append(e.position)
+            inflight -= 1
+    for iid, rpos in results.items():
+        # I2/I6: exactly one result, after its (first) commit
+        assert len(rpos) == 1
+        assert iid in commits and min(commits[iid]) < rpos[0]
+    for iid in aborts:
+        assert iid not in results, "I4: aborted intent executed"
+        assert iid not in commits, "I3: both commit and abort"
+    # I3: decision consistent with votes under first_voter
+    if policy_mode == "first_voter":
+        for iid, vs in votes.items():
+            first = vs[0]["approve"]
+            if first:
+                assert iid in commits
+            else:
+                assert iid in aborts
+    # I6 execution counts
+    for iid, n in env["exec_count"].items():
+        assert n == 1, f"I6: intent {iid} executed {n} times"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    plan=st.lists(st.tuples(st.sampled_from(KINDS), st.booleans()),
+                  min_size=1, max_size=8),
+    policy_mode=st.sampled_from(["on_by_default", "first_voter"]),
+    duplicate_decider=st.booleans(),
+)
+def test_state_machine_invariants(plan, policy_mode, duplicate_decider):
+    """Random plans where each intent kind may be voter-rejected; the
+    invariants must hold for every generated execution."""
+    bus = MemoryBus()
+    env = {"exec_count": defaultdict(int)}
+    rejected_kinds = {k for k, rej in plan if rej}
+
+    def handler(args, e):
+        e["exec_count"][args["iid"]] += 1
+        return {"ok": True}
+
+    plans = [{"intent": {"kind": k, "args": {"iid": f"{i}-{k}"}}}
+             for i, (k, _) in enumerate(plan)] + [{"done": True}]
+    agent = LogActAgent(bus=bus, planner=ScriptPlanner(plans), env=env,
+                        handlers={k: handler for k in KINDS})
+    if policy_mode == "first_voter":
+        agent.add_voter(RuleVoter(
+            BusClient(bus, "rv", "voter"),
+            rules=[lambda b, p: VoteDecision(b["kind"] not in rejected_kinds,
+                                             "gen")]), from_tail=False)
+        agent.set_policy("decider", {"mode": "first_voter"})
+    extra = Decider(BusClient(bus, "dec2", "decider")) \
+        if duplicate_decider else None
+    agent.send_mail("go")
+    for _ in range(10000):
+        n = agent.tick()
+        if extra is not None:
+            n += extra.play_available()
+        if n == 0 and agent.driver.idle:
+            break
+    check_invariants(bus, env, policy_mode)
+    # executed = exactly the non-rejected kinds (under first_voter)
+    if policy_mode == "first_voter":
+        for i, (k, _) in enumerate(plan):
+            iid = f"{i}-{k}"
+            if k in rejected_kinds:
+                assert env["exec_count"].get(iid, 0) == 0
+            else:
+                assert env["exec_count"][iid] == 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_mail=st.integers(1, 6), seed=st.integers(0, 100))
+def test_replay_always_silent(n_mail, seed):
+    """For any completed run, a same-id Driver replay never appends and
+    never consults the planner (determinism, I+§3.2)."""
+    import random
+    rng = random.Random(seed)
+    bus = MemoryBus()
+    env = {"exec_count": defaultdict(int)}
+    plans = []
+    for i in range(n_mail):
+        plans.append({"intent": {"kind": "alpha",
+                                 "args": {"iid": str(i)}}})
+        if rng.random() < 0.3:
+            plans.append({"intent": {"kind": "beta",
+                                     "args": {"iid": f"b{i}"}}})
+    plans.append({"done": True})
+
+    def handler(args, e):
+        e["exec_count"][args["iid"]] += 1
+        return {"r": 1}
+
+    agent = LogActAgent(bus=bus, planner=ScriptPlanner(plans), env=env,
+                        handlers={"alpha": handler, "beta": handler})
+    agent.send_mail("go")
+    agent.run_until_idle(max_rounds=100000)
+    tail = bus.tail()
+
+    from repro.core.driver import Driver
+    probe = ScriptPlanner([{"intent": {"kind": "alpha",
+                                       "args": {"iid": "XX"}}}])
+    d2 = Driver(BusClient(bus, "d2", "driver"), probe,
+                driver_id=agent.driver.driver_id, elect=False)
+    d2.play_available()
+    assert bus.tail() == tail
+    assert probe.i == 0
+    assert d2.done == agent.driver.done
+    assert d2.n_inferences == agent.driver.n_inferences

@@ -1,0 +1,145 @@
+"""AgentKernel control plane (paper §4.1): Raw / Auto-Decider / Auto-Voter /
+Spawn modes, plus the threaded deconstructed deployment."""
+import time
+
+import pytest
+
+from repro.core import entries as E
+from repro.core.acl import BusClient
+from repro.core.agent import LogActAgent
+from repro.core.bus import KvBus, MemoryBus, SqliteBus
+from repro.core.driver import ScriptPlanner
+from repro.core.entries import PayloadType
+from repro.core.introspect import trace_intents
+from repro.core.kernel import AgentKernel, register_image
+from repro.core.voter import RuleVoter
+
+
+@register_image("counter-agent")
+def _counter_image(bus, snapshot_store=None, plans=None, **kw):
+    env = {"n": 0}
+
+    def bump(args, e):
+        e["n"] += 1
+        return {"n": e["n"]}
+
+    agent = LogActAgent(bus=bus, planner=ScriptPlanner(
+        plans or [{"intent": {"kind": "bump", "args": {}}}, {"done": True}]),
+        env=env, handlers={"bump": bump},
+        snapshot_store=snapshot_store)
+    agent.env = env
+    return agent
+
+
+def test_raw_mode_and_backends(tmp_path):
+    kern = AgentKernel(workdir=str(tmp_path))
+    for backend, cls in (("memory", MemoryBus), ("sqlite", SqliteBus),
+                         ("kv", KvBus)):
+        h = kern.create_bus(f"b-{backend}", mode="raw", backend=backend)
+        assert isinstance(h.bus, cls)
+        h.bus.append(E.mail("x"))
+        assert h.bus.tail() == 1
+    assert kern.list_buses() == ["b-kv", "b-memory", "b-sqlite"]
+    kern.shutdown()
+
+
+def test_auto_decider_and_auto_voter(tmp_path):
+    kern = AgentKernel()
+    h = kern.create_bus("a", mode="auto_voter", voters=["rule"])
+    assert h.decider is not None and len(h.voters) == 1
+    # an external driverless client appends an intent; kernel-run voter +
+    # decider process it
+    ext = BusClient(h.bus, "d0", "driver")
+    h.bus.append(E.policy("decider", {"mode": "first_voter"},
+                          issuer="admin"))
+    ext.append(E.intent("bump", {}, "d0", intent_id="i9"))
+    kern.tick_all()
+    kern.tick_all()
+    commits = h.bus.read_type(PayloadType.COMMIT)
+    votes = h.bus.read_type(PayloadType.VOTE)
+    assert len(votes) == 1 and len(commits) == 1
+
+
+def test_spawn_mode_runs_full_agent():
+    kern = AgentKernel()
+    h = kern.create_bus("worker", mode="spawn", image="counter-agent",
+                        voters=["rule"])
+    h.bus.append(E.mail("go"))
+    for _ in range(50):
+        if kern.tick_all() == 0 and h.agent.driver.idle:
+            break
+    assert h.agent.env["n"] == 1
+    ts = trace_intents(h.bus.read(0))
+    assert ts and ts[0].decision == "commit" and ts[0].votes
+
+
+def test_spawn_threaded_mode():
+    """Deployment-shaped: every component on its own thread, coordinating
+    only through the bus."""
+    kern = AgentKernel()
+    h = kern.create_bus("tw", mode="spawn", image="counter-agent",
+                        threaded=True,
+                        image_kw={"plans": [
+                            {"intent": {"kind": "bump", "args": {}}},
+                            {"intent": {"kind": "bump", "args": {}}},
+                            {"done": True}]})
+    h.bus.append(E.mail("go"))
+    assert h.agent.wait_idle(timeout=20.0)
+    kern.shutdown()
+    assert h.agent.env["n"] == 2
+    ts = trace_intents(h.bus.read(0))
+    assert [t.decision for t in ts] == ["commit", "commit"]
+
+
+def test_threaded_poll_driven_pipeline():
+    """Blocking-poll consumers: a voter thread and an executor thread wired
+    directly on poll() (no sync scheduler)."""
+    bus = MemoryBus()
+    import threading
+    stop = threading.Event()
+    results = []
+
+    def voter_loop():
+        cursor = 0
+        vc = BusClient(bus, "v", "voter")
+        while not stop.is_set():
+            got = vc.poll(cursor, [PayloadType.INTENT], timeout=0.2)
+            for e in got:
+                vc.append(E.vote(e.body["intent_id"], "rule", "v", True))
+                cursor = e.position + 1
+
+    def decider_loop():
+        cursor = 0
+        dc = BusClient(bus, "d", "decider")
+        seen = set()
+        while not stop.is_set():
+            got = dc.poll(cursor, [PayloadType.VOTE], timeout=0.2)
+            for e in got:
+                iid = e.body["intent_id"]
+                if iid not in seen:
+                    seen.add(iid)
+                    dc.append(E.commit(iid, "d"))
+                cursor = e.position + 1
+
+    def executor_loop():
+        cursor = 0
+        xc = BusClient(bus, "x", "executor")
+        while not stop.is_set():
+            got = xc.poll(cursor, [PayloadType.COMMIT], timeout=0.2)
+            for e in got:
+                results.append(e.body["intent_id"])
+                xc.append(E.result(e.body["intent_id"], True, {}, "x"))
+                cursor = e.position + 1
+
+    threads = [threading.Thread(target=f, daemon=True)
+               for f in (voter_loop, decider_loop, executor_loop)]
+    [t.start() for t in threads]
+    drv = BusClient(bus, "drv", "driver")
+    for i in range(5):
+        drv.append(E.intent("work", {"i": i}, "drv", intent_id=f"w{i}"))
+    deadline = time.monotonic() + 10
+    while len(results) < 5 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    stop.set()
+    [t.join(timeout=2) for t in threads]
+    assert sorted(results) == [f"w{i}" for i in range(5)]

@@ -1,0 +1,109 @@
+"""Pallas kernel validation (interpret mode on CPU): shape/dtype sweeps
+asserting allclose against the pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models import ssm
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _mha_args(B, Sq, Sk, H, Kv, Dh, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Kv, Dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Kv, Dh), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _ref_of(q, k, v, **kw):
+    B, Sq, H, Dh = q.shape
+    Kv, Sk = k.shape[2], k.shape[1]
+    qq = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * Kv, Sk, Dh)
+    vv = v.transpose(0, 2, 1, 3).reshape(B * Kv, Sk, Dh)
+    o = ref.mha_ref(qq.astype(jnp.float32), kk.astype(jnp.float32),
+                    vv.astype(jnp.float32), **kw)
+    return o.reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("shape", [
+    # (B, Sq, Sk, H, Kv, Dh)
+    (1, 128, 128, 2, 2, 64),      # MHA, Dh padded to 128
+    (2, 256, 256, 4, 2, 128),     # GQA rep=2
+    (1, 128, 384, 4, 1, 128),     # MQA, Sk > Sq
+    (1, 200, 200, 2, 2, 80),      # unaligned seq + head dim (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_mha_sweep(shape, dtype):
+    B, Sq, Sk, H, Kv, Dh = shape
+    q, k, v = _mha_args(B, Sq, Sk, H, Kv, Dh, dtype)
+    o = ops.flash_mha(q, k, v, causal=True, interpret=True)
+    o_ref = _ref_of(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(causal=False),
+    dict(causal=True, window=64),
+    dict(causal=True, softcap=50.0),
+    dict(causal=True, window=128, softcap=30.0),
+])
+def test_flash_mha_variants(kw):
+    q, k, v = _mha_args(2, 256, 256, 4, 2, 128, jnp.float32)
+    o = ops.flash_mha(q, k, v, interpret=True, **kw)
+    o_ref = _ref_of(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [
+    # (b, s, h, p, g, n, chunk, head_block)
+    (1, 64, 4, 16, 1, 32, 16, 4),
+    (2, 128, 8, 32, 2, 16, 32, 8),
+    (1, 96, 4, 64, 1, 64, 32, 2),   # s not a chunk multiple (pad path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_pallas_sweep(shape, dtype):
+    b, s, h, p, g, n, chunk, hb = shape
+    ks = jax.random.split(KEY, 5)
+    x = (jax.random.normal(ks[0], (b, s, h, p)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.3
+    D = jnp.ones((h,)) * 0.5
+    y, st = ops.ssd_chunked_pallas(x, dt, A, B, C, D, chunk=chunk,
+                                   head_block=hb, interpret=True)
+    y_ref, st_ref = ssm.ssd_ref(x.astype(jnp.float32), dt, A, B, C, D)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_ssd_intra_kernel_vs_oracle():
+    b, nc, q, h, p, n = 1, 3, 16, 4, 8, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, nc, q, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, nc, q, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, nc, q, h, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, nc, q, h, n)) * 0.3
+    from repro.kernels.ssd_scan import ssd_intra
+    y, st, dc = ssd_intra(x, dt, a, B, C, head_block=2, interpret=True)
+    y_r, st_r, dc_r = ref.ssd_intra_ref(x, dt, a, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_r), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dc), np.asarray(dc_r), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,187 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step + decode, asserting output shapes and finiteness; plus attention and
+SSD equivalence properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ARCH_IDS, get_config, smoke
+from repro.models import ssm
+from repro.models.layers import attention_chunked, attention_ref
+from repro.models.model import Model
+from repro.models.params import split_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=32, key=KEY):
+    ks = jax.random.split(key, 4)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["patch_embed"] = jax.random.normal(
+            ks[2], (B, cfg.n_frontend_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["frame_embed"] = jax.random.normal(
+            ks[3], (B, cfg.enc_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_grad(arch):
+    cfg = smoke(get_config(arch))
+    model = Model(cfg, dtype=jnp.float32)
+    params, _ = split_params(model.init(KEY))
+    batch = make_batch(cfg)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: model.loss_fn(p, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    # gradients exist and are finite on every leaf
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(bool(jnp.isfinite(g).all()) for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_decode(arch):
+    cfg = smoke(get_config(arch))
+    model = Model(cfg, dtype=jnp.float32)
+    params, _ = split_params(model.init(KEY))
+    B, S = 2, 16
+    cache, _ = split_params(model.init_cache(B, S))
+    tok = jax.random.randint(KEY, (B, 1), 0, cfg.vocab)
+    logits, cache = model.decode_step(params, cache, tok, jnp.int32(0))
+    vp = -(-cfg.vocab // 256) * 256
+    assert logits.shape == (B, 1, vp)
+    assert bool(jnp.isfinite(logits).all())
+    logits2, _ = model.decode_step(params, cache, tok, jnp.int32(1))
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "gemma2_9b", "mixtral_8x7b",
+                                  "mamba2_780m"])
+def test_prefill_decode_consistency(arch):
+    """Greedy decode after prefill(S) must equal teacher-forced forward."""
+    cfg = smoke(get_config(arch))
+    model = Model(cfg, dtype=jnp.float32)
+    params, _ = split_params(model.init(KEY))
+    B, S = 1, 12
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab)
+    # teacher-forced logits at position S-1 predict token S
+    full_logits, _ = model.prefill(params, {"tokens": toks})
+    # prefill S tokens, then decode token S and compare to full forward of S+1
+    logits_pre, cache = model.prefill(params, {"tokens": toks[:, :S]})
+    # decode at position S: needs cache sized >= S+1 -> rebuild decode cache
+    cache_d, _ = split_params(model.init_cache(B, S + 1))
+    logits_d = None
+    for t in range(S + 1):
+        logits_d, cache_d = model.decode_step(
+            params, cache_d, toks[:, t:t + 1], jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                               np.asarray(full_logits[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.sampled_from([8, 33, 64]), kv=st.sampled_from([1, 2, 4]),
+       window=st.sampled_from([None, 16]),
+       softcap=st.sampled_from([None, 30.0]),
+       chunk=st.sampled_from([16, 32]))
+def test_chunked_attention_matches_ref(sq, kv, window, softcap, chunk):
+    B, H, Dh = 2, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(sq * 7 + kv), 3)
+    q = jax.random.normal(ks[0], (B, sq, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, sq, kv, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, sq, kv, Dh), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32), (B, sq))
+    kw = dict(pos_q=pos, pos_k=pos, causal=True, window=window,
+              softcap=softcap)
+    o_ref = attention_ref(q, k, v, **kw)
+    o_chk = attention_chunked(q, k, v, kv_chunk=chunk, **kw)
+    np.testing.assert_allclose(np.asarray(o_chk), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([16, 48, 64]), chunk=st.sampled_from([8, 16]),
+       g=st.sampled_from([1, 2]))
+def test_ssd_chunked_matches_recurrence(s, chunk, g):
+    b, h, p, n = 2, 4, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(s + chunk), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.3
+    D = jnp.ones((h,)) * 0.5
+    y_ref, st_ref = ssm.ssd_ref(x, dt, A, B, C, D)
+    y_chk, st_chk = ssm.ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chk), np.asarray(st_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_decode_matches_prefill_state():
+    """Decoding token-by-token must produce the same final state as the
+    chunked prefill over the same tokens."""
+    b, s, h, p, n, g = 1, 12, 2, 8, 8, 1
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.3
+    _, st_full = ssm.ssd_chunked(x, dt, A, B, C, None, chunk=4)
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    for t in range(s):
+        y, state = ssm.ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                       B[:, t], C[:, t])
+    np.testing.assert_allclose(np.asarray(state), np.asarray(st_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_vocab_padding_masked():
+    cfg = smoke(get_config("whisper_small"), vocab=100)  # pads to 256
+    model = Model(cfg, dtype=jnp.float32)
+    params, _ = split_params(model.init(KEY))
+    batch = make_batch(cfg, S=8)
+    logits, _ = model.prefill(params, batch)
+    assert logits.shape[-1] == 256
+    assert bool((logits[..., 100:] < -1e29).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "mixtral_8x7b"])
+def test_kv_quant_decode_matches_exact(arch):
+    """int8 KV cache: decode distribution ~= exact bf16/f32 decode."""
+    cfg = smoke(get_config(arch))
+    m0 = Model(cfg, dtype=jnp.float32)
+    mq = Model(cfg, dtype=jnp.float32, kv_quant=True)
+    pv, _ = split_params(m0.init(KEY))
+    B, S = 1, 10
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    c0, _ = split_params(m0.init_cache(B, S))
+    cq, _ = split_params(mq.init_cache(B, S))
+    for t in range(S):
+        l0, c0 = m0.decode_step(pv, c0, toks[:, t:t + 1], jnp.int32(t))
+        lq, cq = mq.decode_step(pv, cq, toks[:, t:t + 1], jnp.int32(t))
+    err = float(jnp.abs(jax.nn.softmax(l0) - jax.nn.softmax(lq)).max())
+    assert err < 0.05
+    assert cq["attn"]["k"].dtype == jnp.int8
+
+
+def test_kv_quant_prefill_then_decode():
+    cfg = smoke(get_config("qwen3_4b"))
+    mq = Model(cfg, dtype=jnp.float32, kv_quant=True)
+    pv, _ = split_params(mq.init(KEY))
+    toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab)
+    logits, cache = mq.prefill(pv, {"tokens": toks}, extra_cache=4)
+    assert cache["attn"]["k"].dtype == jnp.int8
+    assert cache["attn"]["k"].shape[2] == 12  # 8 prefill + 4 reserved
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for t in range(4):
+        logits, cache = mq.decode_step(pv, cache, tok, jnp.int32(8 + t))
+        assert bool(jnp.isfinite(logits).all())

@@ -1,0 +1,171 @@
+"""Failure & recovery: executor crash -> reboot Result -> semantic recovery
+(at-most-once), log-anchored checkpoints, health checks."""
+import tempfile
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config, smoke
+from repro.core import entries as E
+from repro.core.acl import BusClient
+from repro.core.agent import LogActAgent
+from repro.core.bus import MemoryBus
+from repro.core.driver import ScriptPlanner
+from repro.core.executor import Executor
+from repro.core.introspect import health_check, summarize_bus, trace_intents
+from repro.core.recovery import RecoveryPlanner, committed_unexecuted
+from repro.data.pipeline import DataConfig
+from repro.optim.optimizer import OptimizerConfig
+from repro.train.train_step import StepConfig
+from repro.train.trainer import (TRAIN_HANDLERS, TrainPlanner, build_env,
+                                 build_training_agent)
+
+
+def small_env(tmpdir, total=24):
+    cfg = smoke(get_config("chatglm3_6b"))
+    return build_env(
+        cfg, OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=total),
+        StepConfig(remat="none"), DataConfig(cfg.vocab, 16, 4), tmpdir)
+
+
+def test_executor_crash_and_roll_forward(tmp_path):
+    env = small_env(str(tmp_path))
+    bus = MemoryBus()
+    agent = build_training_agent(env, total_steps=8, steps_per_intention=4,
+                                 ckpt_every=100, bus=bus)
+    env.crash_after_steps = 6  # process dies inside the 2nd train_chunk
+    agent.send_mail("train")
+    from repro.train.trainer import InjectedCrash
+    with pytest.raises(InjectedCrash):
+        agent.run_until_idle(max_rounds=10000)
+    # the 2nd chunk is committed but has NO result (WAL recovery case)
+    pend = committed_unexecuted(bus)
+    assert len(pend) == 1 and pend[0]["kind"] == "train_chunk"
+    assert env.step == 6  # 4 committed + 2 lost-in-crash
+
+    # new executor process boots on the same bus + same (durable) env
+    env.crash_after_steps = None
+    agent.executor = Executor(
+        BusClient(bus, "executor-2", "executor"), env=env,
+        handlers=TRAIN_HANDLERS, announce_reboot=True)
+    agent.run_until_idle(max_rounds=10000)
+    # driver probed, then resumed; target reached, exactly once per chunk
+    assert env.step == 8
+    ts = trace_intents(bus.read(0))
+    probes = [t for t in ts if t.kind == "probe_state"]
+    assert probes and probes[0].decision == "commit"
+    # data was never re-consumed: cursors strictly increase over train chunks
+    starts = [t.args["data_start"] for t in ts if t.kind == "train_chunk"
+              and t.result and t.result["ok"]]
+    assert starts == sorted(starts) and len(set(starts)) == len(starts)
+
+
+def test_committed_unexecuted_scan():
+    bus = MemoryBus()
+    bus.append(E.intent("train_chunk", {"steps": 4}, "d", intent_id="i1"))
+    bus.append(E.commit("i1", "dec"))
+    assert [x["intent_id"] for x in committed_unexecuted(bus)] == ["i1"]
+    bus.append(E.result("i1", True, {}, "ex"))
+    assert committed_unexecuted(bus) == []
+
+
+def test_semantic_recovery_work_range(tmp_path):
+    """Fig-8 analogue: slow impl crashes mid-range; recovery agent probes,
+    skips completed work, switches to the fast impl, verifies."""
+    out = tmp_path / "out.txt"
+    out.write_text("")
+
+    def process(args, env):
+        lo, hi = args["work_range"]
+        impl = args.get("impl", "rglob_sorted")
+        done = len(out.read_text().splitlines())
+        lines = out.read_text()
+        for i in range(max(lo, done), hi):
+            if impl == "rglob_sorted" and i >= args.get("crash_at", 10**9):
+                raise RuntimeError("killed: too slow")
+            lines += f"unit-{i}\n"
+            out.write_text(lines)
+        return {"done_until": hi, "impl": impl}
+
+    def probe(args, env):
+        return {"done_until": len(out.read_text().splitlines())}
+
+    def verify(args, env):
+        n = len(out.read_text().splitlines())
+        lo, hi = args["task"]["work_range"]
+        return {"lines": n, "complete": n == hi}
+
+    handlers = {"process_range": process, "probe_progress": probe,
+                "verify_output": verify}
+
+    # original agent crashes at unit 12 of [0, 20)
+    bus1 = MemoryBus()
+    a1 = LogActAgent(bus=bus1, planner=ScriptPlanner(
+        [{"intent": {"kind": "process_range",
+                     "args": {"work_range": [0, 20], "impl": "rglob_sorted",
+                              "crash_at": 12}}}]),
+        env=None, handlers=handlers)
+    a1.send_mail("checksum all units")
+    a1.run_until_idle(max_rounds=1000)
+    assert len(out.read_text().splitlines()) == 12
+
+    # recovery agent on a fresh bus, introspecting the original bus
+    bus2 = MemoryBus()
+    rp = RecoveryPlanner(bus1)
+    a2 = LogActAgent(bus=bus2, planner=rp, env=None, handlers=handlers)
+    a2.send_mail("recover the crashed task")
+    a2.run_until_idle(max_rounds=1000)
+    ts = trace_intents(bus2.read(0))
+    kinds = [t.kind for t in ts]
+    assert kinds == ["probe_progress", "process_range", "verify_output"]
+    # resumed exactly at 12 (no redone work) with the FIXED implementation
+    resume = ts[1]
+    assert resume.args["work_range"] == [12, 20]
+    assert resume.args["impl"] == "scandir"
+    assert ts[2].result["value"]["complete"]
+
+
+def test_health_check_flags_straggler():
+    """Synthetic trace: 4 fast intents then 3 slow ones -> straggler."""
+    from repro.core.entries import Entry
+    bus = MemoryBus()
+    pos, now = 0, 100.0
+    for i, lat in enumerate([0.1, 0.1, 0.1, 0.1, 1.0, 1.2, 1.1]):
+        for payload, dt in ((E.intent("work", {}, "d", intent_id=f"i{i}"), 0),
+                            (E.commit(f"i{i}", "dec"), 0.01),
+                            (E.result(f"i{i}", True, {}, "ex"), lat)):
+            now += dt
+            bus._entries.append(Entry(pos, now, payload))
+            pos += 1
+    hc = health_check(bus, slow_factor=3.0)
+    assert hc["verdict"] == "straggler"
+    assert hc["reasons"]
+
+
+def test_checkpoint_roundtrip_and_integrity(tmp_path):
+    env = small_env(str(tmp_path / "ck"))
+    env.ensure_initialized()
+    path = env.ckpts.save(3, env.state, log_position=17, data_cursor=5)
+    assert env.ckpts.latest() == 3
+    assert env.ckpts.verify(3)
+    restored, man = env.ckpts.restore(3, env.state)
+    assert man["log_position"] == 17 and man["data_cursor"] == 5
+    # corrupt it -> verify fails, restore refuses
+    import os
+    p = os.path.join(path, "state.npz")
+    with open(p, "r+b") as f:
+        f.seek(100)
+        f.write(b"\x00\x01\x02corrupt")
+    assert not env.ckpts.verify(3)
+    with pytest.raises(AssertionError):
+        env.ckpts.restore(3, env.state)
+
+
+def test_checkpoint_delete_guard(tmp_path):
+    env = small_env(str(tmp_path / "ck2"))
+    env.ensure_initialized()
+    env.ckpts.save(1, env.state, log_position=0, data_cursor=0)
+    with pytest.raises(PermissionError):
+        env.ckpts.delete(1, pinned=True)
+    env.ckpts.delete(1)
+    assert env.ckpts.latest() is None

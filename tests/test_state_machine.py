@@ -1,0 +1,229 @@
+"""Deconstructed state machine: quorum policies, fencing, duplicate
+deciders, deterministic Driver replay, snapshot recovery."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import entries as E
+from repro.core.acl import BusClient
+from repro.core.agent import LogActAgent
+from repro.core.bus import MemoryBus
+from repro.core.decider import Decider
+from repro.core.driver import Driver, ScriptPlanner
+from repro.core.entries import PayloadType
+from repro.core.introspect import trace_intents
+from repro.core.voter import RuleVoter, StatVoter, VoteDecision
+
+
+def make_agent(plans, env=None, handlers=None, voters_rules=None,
+               policy=None):
+    bus = MemoryBus()
+    env = env if env is not None else {"n": 0}
+
+    def bump(args, e):
+        e["n"] += args.get("by", 1)
+        return {"n": e["n"], "loss": float(args.get("loss", 1.0))}
+
+    agent = LogActAgent(bus=bus, planner=ScriptPlanner(plans), env=env,
+                        handlers={"bump": bump, **(handlers or {})})
+    if voters_rules is not None:
+        agent.add_voter(RuleVoter(BusClient(bus, "rv", "voter"),
+                                  rules=voters_rules), from_tail=False)
+    if policy:
+        agent.set_policy("decider", policy)
+    return agent, env
+
+
+def test_on_by_default_commits_without_votes():
+    agent, env = make_agent([{"intent": {"kind": "bump", "args": {}}},
+                             {"done": True}])
+    agent.send_mail("go")
+    agent.run_until_idle()
+    assert env["n"] == 1
+    ts = trace_intents(agent.bus.read(0))
+    assert ts[0].decision == "commit" and ts[0].votes == []
+
+
+def test_first_voter_policy_blocks():
+    deny = lambda b, p: VoteDecision(False, "no") if b["kind"] == "bump" \
+        else None
+    agent, env = make_agent([{"intent": {"kind": "bump", "args": {}}},
+                             {"done": True}],
+                            voters_rules=[deny],
+                            policy={"mode": "first_voter"})
+    agent.send_mail("go")
+    agent.run_until_idle()
+    assert env["n"] == 0
+    assert trace_intents(agent.bus.read(0))[0].decision == "abort"
+
+
+def test_boolean_or_override():
+    """Rule voter rejects; stat voter overrides (paper dual-voter setup)."""
+    bus = MemoryBus()
+    env = {"n": 0}
+
+    def bump(args, e):
+        e["n"] += 1
+        return {"n": e["n"]}
+
+    agent = LogActAgent(bus=bus, planner=ScriptPlanner(
+        [{"intent": {"kind": "bump", "args": {}}}, {"done": True}]),
+        env=env, handlers={"bump": bump})
+    agent.add_voter(RuleVoter(BusClient(bus, "rv", "voter"),
+                              rules=[lambda b, p: VoteDecision(False, "nope")]),
+                    from_tail=False)
+    agent.add_voter(StatVoter(BusClient(bus, "sv", "voter"),
+                              override_for="rule",
+                              judge=lambda ctx, b: VoteDecision(True, "ok")),
+                    from_tail=False)
+    agent.set_policy("decider", {"mode": "boolean_OR",
+                                 "voter_types": ["rule", "stat"]})
+    agent.send_mail("go")
+    agent.run_until_idle()
+    assert env["n"] == 1
+    t = trace_intents(bus.read(0))[0]
+    assert t.decision == "commit"
+    assert {v["voter_type"]: v["approve"] for v in t.votes} == {
+        "rule": False, "stat": True}
+
+
+def test_boolean_and_aborts_on_any_reject():
+    bus = MemoryBus()
+    env = {"n": 0}
+    agent = LogActAgent(bus=bus, planner=ScriptPlanner(
+        [{"intent": {"kind": "bump", "args": {}}}, {"done": True}]),
+        env=env, handlers={"bump": lambda a, e: {"n": 1}})
+    agent.add_voter(RuleVoter(BusClient(bus, "rv", "voter"), rules=[]),
+                    from_tail=False)  # approves by default
+    agent.add_voter(StatVoter(BusClient(bus, "sv", "voter"),
+                              judge=lambda c, b: VoteDecision(False, "bad")),
+                    from_tail=False)
+    agent.set_policy("decider", {"mode": "boolean_AND",
+                                 "voter_types": ["rule", "stat"]})
+    agent.send_mail("go")
+    agent.run_until_idle()
+    assert trace_intents(bus.read(0))[0].decision == "abort"
+    assert env["n"] == 0
+
+
+def test_duplicate_deciders_are_safe():
+    """Two deciders append redundant commits; executor dedupes (§3.2)."""
+    bus = MemoryBus()
+    env = {"n": 0}
+    agent = LogActAgent(bus=bus, planner=ScriptPlanner(
+        [{"intent": {"kind": "bump", "args": {}}}, {"done": True}]),
+        env=env, handlers={"bump": lambda a, e: e.__setitem__("n", e["n"] + 1)
+                           or {"n": e["n"]}})
+    second = Decider(BusClient(bus, "decider-2", "decider"))
+    agent.send_mail("go")
+    for _ in range(50):
+        n = agent.tick() + second.play_available()
+        if n == 0 and agent.driver.idle:
+            break
+    commits = bus.read_type(PayloadType.COMMIT)
+    assert len(commits) == 2  # both deciders decided identically
+    assert len({c.body["intent_id"] for c in commits}) == 1
+    assert env["n"] == 1  # executed exactly once
+
+
+def test_driver_fencing():
+    bus = MemoryBus()
+    env = {"n": 0}
+    agent = LogActAgent(bus=bus, planner=ScriptPlanner(
+        [{"intent": {"kind": "bump", "args": {}}},
+         {"intent": {"kind": "bump", "args": {}}}, {"done": True}]),
+        env=env, handlers={"bump": lambda a, e: e.__setitem__("n", e["n"] + 1)
+                           or {"n": e["n"]}})
+    agent.send_mail("go")
+    agent.run_until_idle()
+    old = agent.driver
+    assert env["n"] == 2 and not old.fenced
+    # a new driver elects itself; the old one must fence itself off
+    d2 = Driver(BusClient(bus, "d2", "driver"),
+                ScriptPlanner([{"done": True}]), driver_id="driver-new")
+    d2.play_available()   # replays log; elects itself on first inference
+    bus.append(E.mail("wake up"))
+    d2.play_available()
+    old.play_available()
+    assert old.fenced
+    # intents from the fenced driver are ignored by a fresh decider
+    dec = Decider(BusClient(bus, "dec2", "decider"))
+    pre = bus.tail()
+    bus.append(E.intent("bump", {}, old.driver_id, intent_id="stale-1"))
+    dec.play_available()
+    assert all(e.body.get("intent_id") != "stale-1"
+               for e in bus.read_type(PayloadType.COMMIT, start=pre))
+
+
+def test_driver_replay_is_deterministic_and_silent():
+    agent, env = make_agent(
+        [{"intent": {"kind": "bump", "args": {"by": 2}}},
+         {"intent": {"kind": "bump", "args": {"by": 3}}}, {"done": True}])
+    agent.send_mail("go")
+    agent.run_until_idle()
+    tail = agent.bus.tail()
+    fresh_planner = ScriptPlanner([{"intent": {"kind": "bump",
+                                               "args": {"by": 99}}}])
+    d2 = Driver(BusClient(agent.bus, "d2", "driver"), fresh_planner,
+                driver_id=agent.driver.driver_id, elect=False)
+    d2.play_available()
+    assert d2.done and d2.n_inferences == agent.driver.n_inferences
+    assert fresh_planner.i == 0          # planner never consulted
+    assert agent.bus.tail() == tail      # replay appended nothing
+
+
+def test_driver_snapshot_restore():
+    agent, env = make_agent(
+        [{"intent": {"kind": "bump", "args": {}}},
+         {"intent": {"kind": "bump", "args": {}}}, {"done": True}])
+    agent.send_mail("go")
+    agent.run_until_idle()
+    agent.snapshot()
+    pos, snap = agent.snapshots.latest(f"{agent.agent_id}-driver")
+    d2 = Driver(BusClient(agent.bus, "d2", "driver"),
+                ScriptPlanner([]), driver_id=agent.driver.driver_id,
+                elect=False)
+    d2.restore_snapshot(snap)
+    d2.play_available()
+    assert d2.done and d2.cursor == agent.bus.tail()
+
+
+def test_decider_snapshot_restore():
+    agent, env = make_agent([{"intent": {"kind": "bump", "args": {}}},
+                             {"done": True}],
+                            policy={"mode": "first_voter"})
+    agent.add_voter(RuleVoter(BusClient(agent.bus, "rv", "voter"), rules=[]),
+                    from_tail=False)
+    agent.send_mail("go")
+    agent.run_until_idle()
+    snap = agent.decider.to_snapshot()
+    d2 = Decider(BusClient(agent.bus, "dec2", "decider"))
+    d2.restore_snapshot(snap)
+    assert d2.policy.decider.mode == "first_voter"
+    assert d2.decided == agent.decider.decided
+    pre = agent.bus.tail()
+    d2.play_available()
+    assert agent.bus.tail() == pre  # nothing re-decided
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.permutations(["rule", "stat", "sim"]),
+       st.tuples(st.booleans(), st.booleans(), st.booleans()))
+def test_decider_deterministic_under_vote_order(order, approvals):
+    """Same votes in any arrival order -> same decision (quorum_k=2)."""
+    votes = dict(zip(["rule", "stat", "sim"], approvals))
+    outcomes = []
+    bus = MemoryBus()
+    bus.append(E.policy("decider", {"mode": "quorum_k", "k": 2,
+                                    "voter_types": list(votes)}))
+    bus.append(E.intent("bump", {}, "d", intent_id="i1"))
+    dec = Decider(BusClient(bus, "dec", "decider"))
+    for vt in order:
+        bus.append(E.vote("i1", vt, vt, votes[vt]))
+    dec.play_available()
+    commits = bus.read_type(PayloadType.COMMIT)
+    aborts = bus.read_type(PayloadType.ABORT)
+    n_yes = sum(votes.values())
+    if n_yes >= 2:
+        assert len(commits) == 1 and not aborts
+    elif (3 - n_yes) >= 2:
+        assert len(aborts) == 1 and not commits

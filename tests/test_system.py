@@ -1,0 +1,173 @@
+"""End-to-end system tests: LogAct-governed training with voters and
+checkpoints; LogAct-governed serving; sharding/roofline plumbing."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, get_config, smoke
+from repro.core import entries as E
+from repro.core.acl import BusClient
+from repro.core.bus import MemoryBus
+from repro.core.introspect import summarize_bus, trace_intents
+from repro.core.voter import (RuleVoter, StatVoter, STANDARD_RULES,
+                              VoteDecision)
+from repro.data.pipeline import DataConfig
+from repro.distributed import analytic, hlo_analysis
+from repro.distributed.roofline import analyze, model_flops_for
+from repro.optim.optimizer import OptimizerConfig
+from repro.serving.server import build_serving_agent
+from repro.train.train_step import StepConfig
+from repro.train.trainer import build_env, build_training_agent
+
+
+def test_logact_training_end_to_end(tmp_path):
+    """Full production shape: voters guard train chunks, checkpoints are
+    log-anchored, the run reaches the target and the audit trail is
+    complete."""
+    cfg = smoke(get_config("qwen3_4b"))
+    env = build_env(cfg, OptimizerConfig(lr=3e-3, warmup_steps=2,
+                                         total_steps=16),
+                    StepConfig(remat="none"),
+                    DataConfig(cfg.vocab, 16, 4), str(tmp_path))
+    bus = MemoryBus()
+    agent = build_training_agent(env, total_steps=16, steps_per_intention=4,
+                                 ckpt_every=8, bus=bus)
+    agent.add_voter(RuleVoter(BusClient(bus, "rv", "voter"),
+                              rules=STANDARD_RULES), from_tail=False)
+    agent.set_policy("decider", {"mode": "first_voter"})
+    agent.set_policy("voter:rule", {"lr_bounds": (0.0, 0.1)})
+    agent.send_mail("train to 16 steps")
+    agent.run_until_idle(max_rounds=100000)
+
+    assert env.step == 16
+    assert env.ckpts.latest() is not None
+    s = summarize_bus(bus)
+    assert s["n_aborted"] == 0
+    assert s["n_committed"] == s["n_completed"] >= 5
+    # audit: every committed train chunk has votes + result on the log
+    for t in trace_intents(bus.read(0)):
+        if t.kind == "train_chunk":
+            assert t.votes and t.decision == "commit" and t.result["ok"]
+    # loss is finite and recorded in every result
+    losses = [t.result["value"]["loss"] for t in trace_intents(bus.read(0))
+              if t.kind == "train_chunk"]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_unsafe_intents_blocked_while_training_continues(tmp_path):
+    """A poisoned planner proposes destructive intents mid-run; the rule
+    voter blocks them; benign chunks still commit (Enforced-Safety)."""
+    from repro.core.driver import ScriptPlanner
+    from repro.core.agent import LogActAgent
+    from repro.train.trainer import TRAIN_HANDLERS
+    cfg = smoke(get_config("chatglm3_6b"))
+    env = build_env(cfg, OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                         total_steps=8),
+                    StepConfig(remat="none"),
+                    DataConfig(cfg.vocab, 16, 4), str(tmp_path))
+    bus = MemoryBus()
+    plans = [
+        {"intent": {"kind": "train_chunk", "args": {"steps": 2,
+                                                    "data_start": 0}}},
+        {"intent": {"kind": "delete_checkpoint", "args": {"step": 0}}},
+        {"intent": {"kind": "run_lambda",
+                    "args": {"source": "shutil.rmtree('/ckpts')"}}},
+        {"intent": {"kind": "set_lr", "args": {"lr": 1000.0}}},
+        {"intent": {"kind": "train_chunk", "args": {"steps": 2,
+                                                    "data_start": 2}}},
+        {"done": True},
+    ]
+    agent = LogActAgent(bus=bus, planner=ScriptPlanner(plans), env=env,
+                        handlers=TRAIN_HANDLERS)
+    agent.add_voter(RuleVoter(BusClient(bus, "rv", "voter"),
+                              rules=STANDARD_RULES), from_tail=False)
+    agent.set_policy("decider", {"mode": "first_voter"})
+    agent.set_policy("voter:rule", {"lr_bounds": (0.0, 0.1)})
+    agent.send_mail("go")
+    agent.run_until_idle(max_rounds=100000)
+    ts = trace_intents(bus.read(0))
+    by_kind = {t.kind: t.decision for t in ts}
+    assert by_kind["delete_checkpoint"] == "abort"
+    assert by_kind["run_lambda"] == "abort"
+    assert by_kind["set_lr"] == "abort"
+    assert env.step == 4  # both benign chunks committed + executed
+    assert env.lr_scale == 1.0
+
+
+def test_logact_serving_end_to_end():
+    cfg = smoke(get_config("qwen3_4b"))
+    agent = build_serving_agent(cfg, max_batch=4)
+    agent.send_mail("req1", prompt_tokens=[1, 2, 3])
+    agent.send_mail("req2", prompt_tokens=[4, 5])
+    agent.run_until_idle(max_rounds=10000)
+    ts = trace_intents(agent.bus.read(0))
+    serve = [t for t in ts if t.kind == "serve_batch"]
+    assert len(serve) == 1 and serve[0].result["ok"]
+    gen = serve[0].result["value"]["generated"]
+    assert len(gen) == 2 and len(gen[0]) == 16
+    assert all(0 <= t < -(-cfg.vocab // 256) * 256 for row in gen
+               for t in row)
+
+
+def test_hlo_collective_parser():
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(bf16[1,128]{1,0} %x), replica_groups={}
+  %ar.1 = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %rs = f32[32]{0} reduce-scatter(f32[256]{0} %z), dimensions={0}
+  %a2a = (f32[16]{0}, f32[16]{0}) all-to-all(f32[16]{0} %p, f32[16]{0} %q)
+  %cp-start = bf16[4]{0} collective-permute-start(bf16[4]{0} %w)
+  %cp-done = bf16[4]{0} collective-permute-done(bf16[4]{0} %cp-start)
+  %dot = f32[4,4]{1,0} dot(f32[4,8]{1,0} %a, f32[8,4]{1,0} %b)
+"""
+    total, by_op, counts = hlo_analysis.collective_bytes(hlo)
+    assert by_op["all-gather"] == 8 * 128 * 2
+    assert by_op["all-reduce"] == 256 * 4
+    assert by_op["reduce-scatter"] == 32 * 4
+    assert by_op["all-to-all"] == 2 * 16 * 4
+    assert by_op["collective-permute"] == 4 * 2  # start counted, done not
+    assert counts["all-gather"] == 1
+    assert total == sum(by_op.values())
+
+
+def test_roofline_math():
+    r = analyze("a", "s", chips=256, hlo_flops=256 * 197e12,
+                hlo_bytes=256 * 819e9 * 0.5, coll_bytes=256 * 50e9 * 0.25,
+                model_flops=256 * 197e12 * 0.8)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(0.25)
+    assert r.bottleneck == "compute"
+    assert r.mfu == pytest.approx(0.8)
+    assert r.useful_ratio == pytest.approx(0.8)
+
+
+def test_analytic_cost_sanity():
+    """Analytic flops within 2x of 6ND for dense train (attention etc. on
+    top of the 6ND floor), and decode << train."""
+    cfg = get_config("qwen3_4b")
+    tr = analytic.cost(cfg, SHAPES["train_4k"], chips=256, model_shards=16,
+                       data_shards=16, remat="none")
+    floor = 6.0 * cfg.n_params() * SHAPES["train_4k"].global_batch \
+        * SHAPES["train_4k"].seq_len
+    assert floor < tr.flops < 2.0 * floor
+    dec = analytic.cost(cfg, SHAPES["decode_32k"], chips=256,
+                        model_shards=16, data_shards=16)
+    assert dec.flops < tr.flops / 1000
+    # grad compression shrinks collective bytes
+    comp = analytic.cost(cfg, SHAPES["train_4k"], chips=256, model_shards=16,
+                         data_shards=16, compress_grads=True)
+    assert comp.coll_bytes < tr.coll_bytes
+
+
+def test_sharding_rules_divisibility_fallback():
+    from repro.distributed.sharding import ShardingRules, _fit_spec
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = ShardingRules(mesh=mesh)
+    # duplicate mesh axis in one spec is dropped at the second position
+    spec = _fit_spec(mesh, P("model", None, "model"), (8, 4, 6))
+    assert spec == P("model", None, None)
+    spec2 = _fit_spec(mesh, P(("data", "model"), None), (7, 3))
+    assert spec2 == P(("data", "model"), None)  # size 1 divides everything
