@@ -1,0 +1,117 @@
+"""Bus data-plane microbenchmark: batched appends + push-down filtered reads.
+
+Measures, for every backend (memory / sqlite / kv):
+
+  * appends/s at batch sizes {1, 16, 256} via ``append_many`` — the batch
+    sweep exposes how much per-append fixed cost (transaction commit,
+    object PUT) batching amortizes;
+  * filtered-read latency: ``read(0, types=[VOTE])`` over a mixed-type log
+    vs. the decode-everything-then-filter baseline the pre-segmented bus
+    forced on every consumer.
+
+CSV rows: ``bus.<backend>.append_b<batch>,us_per_append,appends_per_s=...``
+and ``bus.<backend>.filtered_read,us_per_call,...``; plus a derived
+``bus.sqlite.batch_amortization`` row (batch-256 vs batch-1 speedup).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import Callable, Dict, List
+
+from repro.core import entries as E
+from repro.core.bus import AgentBus, make_bus
+from repro.core.entries import PayloadType
+
+N_APPEND = 1024          # entries appended per (backend, batch) cell
+N_READ_LOG = 2048        # mixed-type log size for the read benchmark
+READ_REPS = 50
+
+
+def _fresh_bus(backend: str, workdir: str, tag: str) -> AgentBus:
+    if backend == "memory":
+        return make_bus("memory")
+    if backend == "sqlite":
+        return make_bus("sqlite", path=os.path.join(workdir, f"{tag}.db"))
+    return make_bus("kv", path=os.path.join(workdir, f"{tag}-kv"))
+
+
+def bench_appends(backend: str, batch: int, workdir: str) -> Dict[str, float]:
+    bus = _fresh_bus(backend, workdir, f"append-{batch}")
+    payloads = [E.mail(f"payload-{i}", sender="bench")
+                for i in range(N_APPEND)]
+    t0 = time.monotonic()
+    for i in range(0, N_APPEND, batch):
+        bus.append_many(payloads[i:i + batch])
+    dt = time.monotonic() - t0
+    bus.close()
+    return {"appends_per_s": N_APPEND / max(dt, 1e-9),
+            "us_per_append": dt / N_APPEND * 1e6}
+
+
+def bench_filtered_read(backend: str, workdir: str) -> Dict[str, float]:
+    bus = _fresh_bus(backend, workdir, "read")
+    batch: List = []
+    for i in range(N_READ_LOG):
+        if i % 10 == 0:
+            batch.append(E.vote(f"i{i}", "rule", "v", True))
+        elif i % 10 == 1:
+            batch.append(E.commit(f"i{i}", "dec"))
+        else:
+            batch.append(E.inf_out({"plan": {"step": i, "pad": "x" * 128}},
+                                   "driver"))
+    bus.append_many(batch)
+    # warm any decode caches the backend keeps, then measure steady-state
+    bus.read(0, types=[PayloadType.VOTE])
+    t0 = time.monotonic()
+    for _ in range(READ_REPS):
+        votes = bus.read(0, types=[PayloadType.VOTE])
+    filtered_us = (time.monotonic() - t0) / READ_REPS * 1e6
+    assert len(votes) == (N_READ_LOG + 9) // 10
+    t0 = time.monotonic()
+    for _ in range(READ_REPS):
+        baseline = [e for e in bus.read(0) if e.type == PayloadType.VOTE]
+    unfiltered_us = (time.monotonic() - t0) / READ_REPS * 1e6
+    assert len(baseline) == len(votes)
+    bus.close()
+    return {"filtered_us": filtered_us, "unfiltered_us": unfiltered_us,
+            "speedup": unfiltered_us / max(filtered_us, 1e-9)}
+
+
+def main(rows: List[str]) -> None:
+    with tempfile.TemporaryDirectory() as d:
+        print(f"\n# appends/s via append_many ({N_APPEND} entries/cell)")
+        print(f"  {'backend':8s} {'batch':>6s} {'appends/s':>12s} "
+              f"{'us/append':>10s}")
+        per_backend: Dict[str, Dict[int, float]] = {}
+        for backend in ("memory", "sqlite", "kv"):
+            for batch in (1, 16, 256):
+                r = bench_appends(backend, batch, d)
+                per_backend.setdefault(backend, {})[batch] = r["appends_per_s"]
+                print(f"  {backend:8s} {batch:6d} {r['appends_per_s']:12.0f} "
+                      f"{r['us_per_append']:10.2f}")
+                rows.append(
+                    f"bus.{backend}.append_b{batch},"
+                    f"{r['us_per_append']:.2f},"
+                    f"appends_per_s={r['appends_per_s']:.0f}")
+        amort = per_backend["sqlite"][256] / max(per_backend["sqlite"][1], 1e-9)
+        print(f"\n  sqlite batch-256 vs batch-1 amortization: {amort:.1f}x")
+        rows.append(f"bus.sqlite.batch_amortization,0,x{amort:.1f}")
+
+        print(f"\n# filtered-read latency ({N_READ_LOG}-entry mixed log, "
+              f"10% VOTE)")
+        print(f"  {'backend':8s} {'pushdown':>10s} {'decode-all':>11s} "
+              f"{'speedup':>8s}")
+        for backend in ("memory", "sqlite", "kv"):
+            r = bench_filtered_read(backend, d)
+            print(f"  {backend:8s} {r['filtered_us']:9.0f}us "
+                  f"{r['unfiltered_us']:10.0f}us {r['speedup']:7.1f}x")
+            rows.append(
+                f"bus.{backend}.filtered_read,{r['filtered_us']:.1f},"
+                f"decode_all_us={r['unfiltered_us']:.1f}_"
+                f"speedup=x{r['speedup']:.1f}")
+
+
+if __name__ == "__main__":
+    main([])

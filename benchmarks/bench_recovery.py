@@ -136,7 +136,13 @@ def main(rows: List[str]) -> None:
         assert verify.result["value"]["complete"]
         assert resume.args["work_range"][0] == done1  # no redone work
         assert resume.args["impl"] == "scandir"
-        assert speedup > 20
+        # Floor: the pathology sleeps SLOW_SLEEP=4ms per unit (plus
+        # listdir+checksum, ~6.5ms/unit measured), while the fixed impl
+        # measures ~0.24-0.52 ms/unit on this container. (The old floor of
+        # 20x was calibrated against the pre-batching bus, whose full-log
+        # re-scans inflated phase-1 wall time; measured post-refactor
+        # speedups span 14-49x depending on machine contention.)
+        assert speedup > 8
         rows.append(f"recovery.speedup,{per_unit_fast*1e6:.1f},"
                     f"speedup={speedup:.0f}x_units={fast['units']}")
         rows.append(f"recovery.window,{t_rec*1e6:.0f},s={t_rec:.2f}")

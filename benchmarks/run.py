@@ -1,5 +1,7 @@
 """Benchmark harness: one module per paper figure/table.
 
+  bench_bus_throughput -> bus data plane (append_many batches, push-down
+                          filtered reads) across backends
   bench_overhead  -> Fig 5 (LogAct overhead: stages, log bytes, backends)
   bench_voters    -> Fig 6 (Utility/ASR/latency/tokens per defense)
   bench_hotswap   -> Fig 7 (hot-swapping voters via policy entries)
@@ -15,10 +17,11 @@ import sys
 import time
 import traceback
 
-from . import (bench_hotswap, bench_overhead, bench_recovery, bench_roofline,
-               bench_swarm, bench_voters)
+from . import (bench_bus_throughput, bench_hotswap, bench_overhead,
+               bench_recovery, bench_roofline, bench_swarm, bench_voters)
 
 BENCHES = [
+    ("bus_throughput", bench_bus_throughput.main),
     ("overhead", bench_overhead.main),
     ("voters", bench_voters.main),
     ("hotswap", bench_hotswap.main),

@@ -18,7 +18,7 @@ from repro.configs.base import get_config, smoke
 from repro.core.acl import BusClient
 from repro.core.bus import MemoryBus
 from repro.core.executor import Executor
-from repro.core.introspect import summarize_bus, trace_intents
+from repro.core.introspect import TRACE_TYPES, summarize_bus, trace_intents
 from repro.core.recovery import committed_unexecuted
 from repro.core.voter import RuleVoter, STANDARD_RULES
 from repro.data.pipeline import DataConfig
@@ -71,11 +71,11 @@ def main() -> None:
         agent.run_until_idle(max_rounds=10 ** 6)
 
         losses = [t.result["value"]["loss"]
-                  for t in trace_intents(bus.read(0))
+                  for t in trace_intents(bus.read(0, types=TRACE_TYPES))
                   if t.kind == "train_chunk" and t.result
                   and t.result.get("ok")]
         evals = [t.result["value"]["eval_loss"]
-                 for t in trace_intents(bus.read(0))
+                 for t in trace_intents(bus.read(0, types=TRACE_TYPES))
                  if t.kind == "eval" and t.result and t.result.get("ok")]
         s = summarize_bus(bus)
         print(f"\ntrained to step {env.step}/{args.steps} "

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from repro.configs.base import get_config, smoke
 from repro.core.acl import BusClient
 from repro.core.bus import MemoryBus
-from repro.core.introspect import health_check, trace_intents
+from repro.core.introspect import TRACE_TYPES, health_check, trace_intents
 from repro.core.supervisor import Supervisor
 from repro.core.voter import RuleVoter, VoteDecision
 from repro.serving.server import build_serving_agent
@@ -51,7 +51,7 @@ def main() -> None:
         hc = view["health"][name]["verdict"]
         print(f"  {name}: {done} serve batches committed+executed, "
               f"{s['total_bytes']} log bytes, health={hc}")
-        for t in trace_intents(agents[name].bus.read(0)):
+        for t in trace_intents(agents[name].bus.read(0, types=TRACE_TYPES)):
             if t.kind == "serve_batch" and t.result and t.result["ok"]:
                 total += t.result["value"]["batch"]
     print(f"served {total} requests across {N_SERVERS} agents")

@@ -9,7 +9,8 @@ from .driver import Driver, Planner, ScriptPlanner
 from .entries import Entry, Payload, PayloadType
 from .executor import Executor
 from .failover import ElasticWorkerPool, StandbyExecutor
-from .introspect import health_check, summarize_bus, trace_intents
+from .introspect import (BusObserver, TRACE_TYPES, health_check,
+                         summarize_bus, trace_intents)
 from .kernel import AgentKernel, AGENT_IMAGES, VOTER_LIBRARY, register_image
 from .policy import DeciderPolicy, PolicyState
 from .recovery import RecoveryPlanner, committed_unexecuted
@@ -23,7 +24,8 @@ __all__ = [
     "LogActAgent", "AgentBus", "KvBus", "MemoryBus", "SqliteBus", "make_bus",
     "Decider", "Driver", "Planner", "ScriptPlanner", "Entry", "Payload",
     "PayloadType", "Executor", "health_check", "summarize_bus",
-    "trace_intents", "ElasticWorkerPool", "StandbyExecutor", "AgentKernel", "AGENT_IMAGES", "VOTER_LIBRARY",
+    "trace_intents", "BusObserver", "TRACE_TYPES",
+    "ElasticWorkerPool", "StandbyExecutor", "AgentKernel", "AGENT_IMAGES", "VOTER_LIBRARY",
     "register_image", "DeciderPolicy", "PolicyState", "RecoveryPlanner",
     "committed_unexecuted", "DirSnapshotStore", "MemorySnapshotStore",
     "SnapshotStore", "Supervisor", "RuleVoter", "StatVoter", "Voter",

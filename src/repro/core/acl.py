@@ -6,6 +6,14 @@ A ``BusClient`` wraps an ``AgentBus`` with an identity and per-type
 mechanism that prevents the paper's Case-3 Byzantine Executor: an Executor
 credential simply cannot append ``Vote`` / ``Commit`` / ``Policy`` entries,
 so it cannot impersonate a Voter or Decider or rewire safety policy.
+
+ACL enforcement is *pushed down* into the backend: the permitted type set
+(intersected with any ``types=`` the caller requests) becomes the backend's
+native type filter (SQL ``WHERE type IN``, per-type index probe, in-segment
+filter), so a restricted client never materializes entries it may not see.
+Decoded-entry caching lives on the bus instance itself (shared by every
+client in the process), so ``Entry``/``Payload`` JSON is parsed once per
+process, not once per component per step.
 """
 from __future__ import annotations
 
@@ -13,6 +21,8 @@ from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence
 
 from .bus import AgentBus
 from .entries import ALL_TYPES, Entry, Payload, PayloadType
+
+_ALL_SET = frozenset(ALL_TYPES)
 
 
 class AclError(PermissionError):
@@ -75,9 +85,31 @@ class BusClient:
                 f"{payload.type.value}")
         return self.bus.append(payload)
 
-    def read(self, start: int, end: Optional[int] = None) -> List[Entry]:
-        return [e for e in self.bus.read(start, end)
-                if e.type in self.perms.read]
+    def append_many(self, payloads: Sequence[Payload]) -> List[int]:
+        """Batched append; every payload type must be permitted (the batch
+        is all-or-nothing, checked before anything reaches the bus)."""
+        denied = {p.type for p in payloads} - self.perms.append
+        if denied:
+            raise AclError(
+                f"{self.client_id} (role={self.role}) may not append "
+                f"{sorted(t.value for t in denied)}")
+        return self.bus.append_many(payloads)
+
+    def read(self, start: int, end: Optional[int] = None,
+             types: Optional[Sequence[PayloadType]] = None) -> List[Entry]:
+        """Filtered range read. ``types`` is intersected with this client's
+        read permissions and pushed down to the backend (types outside the
+        permission set are silently invisible, as with unfiltered reads)."""
+        if types is None:
+            allowed = self.perms.read
+            if allowed == _ALL_SET:
+                return self.bus.read(start, end)
+        else:
+            allowed = _ts(types) & self.perms.read
+            if not allowed:
+                return []
+        return self.bus.read(start, end,
+                             types=sorted(allowed, key=lambda t: t.value))
 
     def tail(self) -> int:
         return self.bus.tail()

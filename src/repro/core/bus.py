@@ -1,40 +1,102 @@
 """The AgentBus: a linearizable, durable, typed shared log (paper §3, §4.1).
 
-API (paper Fig. 4): ``append(payload) -> position``, ``read(start, end)``,
-``tail()``, and the blocking ``poll(start, filter) -> entries``.
+API (paper Fig. 4, extended for the batched data plane):
+
+* ``append(payload) -> position`` — single linearizable append.
+* ``append_many(payloads) -> positions`` — batched append: one transaction
+  (SQLite) / one segment object (KV) / one lock acquisition (memory) per
+  batch, so the per-append fixed cost (commit, round-trip, lock) is
+  amortized across the batch. Positions are dense and contiguous: a batch
+  occupies ``[positions[0], positions[0] + len(payloads))``.
+* ``read(start, end=None, types=None) -> entries`` — range read with
+  optional *push-down type filtering*: ``types`` becomes a SQL
+  ``WHERE type IN (...)`` in ``SqliteBus``, a per-type position index probe
+  in ``MemoryBus``, and an in-segment filter in ``KvBus``, so consumers
+  that only care about a few entry types never materialize the rest.
+* ``tail()`` — position one past the last entry.
+* ``poll(start, filter, timeout)`` — blocking filtered read. The scan
+  resumes from the previously observed tail on spurious wakeups (it never
+  re-reads or re-filters the already-scanned ``[start, tail)`` suffix).
 
 Three backends (paper §4.1):
 
-* ``MemoryBus``     — in-process, no durability; fastest.
-* ``SqliteBus``     — one row per entry; durable across reboots of the node.
-* ``KvBus``         — one object per entry over a file-per-key store,
-                      emulating a remote disaggregated KV store (the paper's
-                      DynamoDB / "AnonDB" variant); optional injected
-                      round-trip latency for the Fig-5 backend sweep.
+* ``MemoryBus``     — in-process, no durability; fastest. Maintains a
+                      per-type entry index for O(matches) filtered reads.
+* ``SqliteBus``     — one row per entry; durable across reboots of the
+                      node. Appends use a cached tail + explicit-position
+                      ``INSERT`` (no ``MAX(position)`` subquery per append);
+                      cross-process races are resolved by retrying on the
+                      primary-key conflict. Decoded entries are cached per
+                      bus instance (position -> Entry), so JSON is parsed
+                      once per process, not once per component per step.
+* ``KvBus``         — *segmented* log over a file-per-key store, emulating
+                      a remote disaggregated KV store (the paper's
+                      DynamoDB / "AnonDB" variant). Entries are grouped
+                      into immutable multi-entry segment objects
+                      (``seg-<start>.json``, one per ``append_many`` batch);
+                      a cached segment index (refreshed by one LIST) makes
+                      ``tail()`` O(1) amortized instead of a file-existence
+                      probe per position, and ``read`` one GET per segment
+                      instead of one per entry. The optional injected
+                      round-trip latency (``latency_s``, Fig-5 backend
+                      sweep) is charged **per object fetched/stored**
+                      (GET/PUT); LIST and cache hits are free, modeling a
+                      client with a local manifest/segment cache.
 
-All backends are linearizable for ``append`` (single atomic position
-assignment) and support concurrent appenders/readers from multiple threads.
-``SqliteBus``/``KvBus`` additionally support multiple *processes* (positions
-are assigned transactionally / via atomic file creation).
+All backends are linearizable for ``append``/``append_many`` (single atomic
+assignment of a contiguous position range) and support concurrent
+appenders/readers from multiple threads. ``SqliteBus``/``KvBus``
+additionally support multiple *processes* (positions are assigned
+transactionally / via atomic hard-link creation of segment objects).
+
+Blocking waits (``poll``) use condition variables on ``MemoryBus`` and an
+adaptive exponential backoff (start ~0.5 ms, cap ~20 ms) on the durable
+backends, replacing fixed-interval sleep polling.
+
+Entries returned by ``read``/``poll`` are **shared, logically immutable
+records** on every backend (``MemoryBus`` stores them directly; the durable
+backends cache decoded entries). Consumers must never mutate an entry's
+payload body — copy first (the ``Executor`` deep-copies args before handing
+them to user handlers for exactly this reason).
 """
 from __future__ import annotations
 
+import bisect
+import json
 import os
 import sqlite3
 import threading
 import time
-from typing import Iterable, List, Optional, Sequence
+import uuid
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .entries import ALL_TYPES, Entry, Payload, PayloadType
+from .entries import ALL_TYPES, Entry, Payload, PayloadType, _json_default
+
+#: Adaptive wait bounds for the durable backends' poll loops.
+_BACKOFF_MIN = 0.0005
+_BACKOFF_MAX = 0.02
+
+TypeFilter = Optional[Sequence[PayloadType]]
+
+
+def _parse_types(types: TypeFilter) -> Optional[frozenset]:
+    if types is None:
+        return None
+    return frozenset(PayloadType.parse(t) for t in types)
 
 
 class AgentBus:
-    """Abstract AgentBus. Subclasses implement the four storage methods."""
+    """Abstract AgentBus. Subclasses implement the storage methods."""
 
     def append(self, payload: Payload) -> int:
+        return self.append_many([payload])[0]
+
+    def append_many(self, payloads: Sequence[Payload]) -> List[int]:
+        """Append a batch atomically; returns the (contiguous) positions."""
         raise NotImplementedError
 
-    def read(self, start: int, end: Optional[int] = None) -> List[Entry]:
+    def read(self, start: int, end: Optional[int] = None,
+             types: TypeFilter = None) -> List[Entry]:
         raise NotImplementedError
 
     def tail(self) -> int:
@@ -46,21 +108,24 @@ class AgentBus:
         """Block until >=1 entry with type in ``filter`` exists at
         position >= ``start``; return all such entries in [start, tail).
 
-        Returns [] on timeout. Default implementation: condition-wait if the
-        backend supports in-process notification, else bounded spin.
+        Returns [] on timeout. The scan cursor advances past suffixes that
+        contained no matching entries, so a wakeup caused by non-matching
+        appends never re-reads the suffix it already inspected.
         """
         deadline = None if timeout is None else time.monotonic() + timeout
-        fs = set(PayloadType.parse(t) for t in filter)
+        fs = tuple(PayloadType.parse(t) for t in filter)
+        scan = start
         while True:
-            entries = [e for e in self.read(start) if e.type in fs]
-            if entries:
-                return entries
+            tail = self.tail()
+            if tail > scan:
+                entries = self.read(scan, tail, types=fs)
+                if entries:
+                    return entries
+                scan = tail  # nothing matched in [scan, tail): never rescan
             remaining = None if deadline is None else deadline - time.monotonic()
             if remaining is not None and remaining <= 0:
                 return []
-            if not self._wait_for_append(self.tail(), remaining):
-                if deadline is not None and time.monotonic() >= deadline:
-                    return []
+            self._wait_for_append(tail, remaining)
 
     # -- helpers -----------------------------------------------------------
     def _wait_for_append(self, known_tail: int,
@@ -68,9 +133,25 @@ class AgentBus:
         """Wait until tail() > known_tail. Returns True if it advanced."""
         raise NotImplementedError
 
+    def _backoff_wait(self, known_tail: int,
+                      timeout: Optional[float]) -> bool:
+        """Adaptive poll: exponential backoff between tail probes."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        wait = _BACKOFF_MIN
+        while True:
+            if self.tail() > known_tail:
+                return True
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                time.sleep(min(wait, remaining))
+            else:
+                time.sleep(wait)
+            wait = min(wait * 2, _BACKOFF_MAX)
+
     def read_type(self, *types: PayloadType, start: int = 0) -> List[Entry]:
-        ts = set(types)
-        return [e for e in self.read(start) if e.type in ts]
+        return self.read(start, types=types)
 
     def close(self) -> None:  # pragma: no cover - backend-specific
         pass
@@ -81,21 +162,52 @@ class AgentBus:
 # ---------------------------------------------------------------------------
 
 class MemoryBus(AgentBus):
+    """In-process log with a per-type index for push-down filtered reads."""
+
     def __init__(self) -> None:
         self._entries: List[Entry] = []
+        #: type -> (positions, entries) parallel sorted lists
+        self._by_type: Dict[PayloadType, Tuple[List[int], List[Entry]]] = {}
         self._cond = threading.Condition()
 
-    def append(self, payload: Payload) -> int:
+    def append_many(self, payloads: Sequence[Payload]) -> List[int]:
+        if not payloads:
+            return []
         with self._cond:
-            pos = len(self._entries)
-            self._entries.append(Entry(pos, time.time(), payload))
+            base = len(self._entries)
+            now = time.time()
+            positions = []
+            for i, p in enumerate(payloads):
+                e = Entry(base + i, now, p)
+                self._entries.append(e)
+                idx = self._by_type.setdefault(p.type, ([], []))
+                idx[0].append(e.position)
+                idx[1].append(e)
+                positions.append(e.position)
             self._cond.notify_all()
-            return pos
+            return positions
 
-    def read(self, start: int, end: Optional[int] = None) -> List[Entry]:
+    def read(self, start: int, end: Optional[int] = None,
+             types: TypeFilter = None) -> List[Entry]:
+        fs = _parse_types(types)
         with self._cond:
-            end = len(self._entries) if end is None else min(end, len(self._entries))
-            return list(self._entries[max(0, start):end])
+            n = len(self._entries)
+            lo, hi = max(0, start), n if end is None else min(end, n)
+            if lo >= hi:
+                return []
+            if fs is None:
+                return list(self._entries[lo:hi])
+            out: List[Entry] = []
+            for t in fs:
+                idx = self._by_type.get(t)
+                if idx is None:
+                    continue
+                positions, ents = idx
+                i = bisect.bisect_left(positions, lo)
+                j = bisect.bisect_left(positions, hi)
+                out.extend(ents[i:j])
+            out.sort(key=lambda e: e.position)
+            return out
 
     def tail(self) -> int:
         with self._cond:
@@ -113,15 +225,27 @@ class MemoryBus(AgentBus):
 
 class SqliteBus(AgentBus):
     """Durable bus: one row per entry. Safe for multi-thread/multi-process use
-    (WAL journal mode; position assignment is transactional)."""
+    (WAL journal mode; position assignment is transactional).
 
-    _POLL_INTERVAL = 0.005
+    Appends keep a cached tail so position assignment is a plain ``INSERT``
+    of explicit positions (no ``MAX(position)`` subquery); a concurrent
+    appender in another process surfaces as a primary-key conflict, which
+    refreshes the cached tail and retries. ``append_many`` writes the whole
+    batch in a single transaction. Decoded entries are cached per instance
+    so repeated reads of the same positions skip JSON parsing.
+    """
+
+    _CACHE_MAX = 65536
 
     def __init__(self, path: str) -> None:
         self._path = path
         self._local = threading.local()
+        self._append_lock = threading.Lock()
+        self._cached_tail: Optional[int] = None  # next position to assign
+        self._decode_cache: Dict[int, Entry] = {}
+        self._cache_lock = threading.Lock()
         conn = self._conn()
-        conn.execute("PRAGMA journal_mode=WAL")
+        conn.execute("PRAGMA journal_mode=WAL")  # persistent, set once
         conn.execute(
             "CREATE TABLE IF NOT EXISTS log ("
             " position INTEGER PRIMARY KEY,"
@@ -135,31 +259,70 @@ class SqliteBus(AgentBus):
         conn = getattr(self._local, "conn", None)
         if conn is None:
             conn = sqlite3.connect(self._path, timeout=30.0)
+            # WAL + NORMAL is the standard throughput pairing: commits no
+            # longer fsync the WAL on every transaction (the WAL is synced
+            # at checkpoint), yet the database cannot be corrupted by a
+            # crash. synchronous is per-connection, so set it here — every
+            # thread gets its own connection.
+            conn.execute("PRAGMA synchronous=NORMAL")
             self._local.conn = conn
         return conn
 
-    def append(self, payload: Payload) -> int:
+    def append_many(self, payloads: Sequence[Payload]) -> List[int]:
+        if not payloads:
+            return []
         conn = self._conn()
         ts = time.time()
-        with conn:  # transaction => linearizable position assignment
-            cur = conn.execute(
-                "INSERT INTO log(position, realtime_ts, type, payload) "
-                "VALUES ((SELECT COALESCE(MAX(position)+1, 0) FROM log), ?, ?, ?)",
-                (ts, payload.type.value, payload.to_json()))
-            return cur.lastrowid
+        with self._append_lock:
+            while True:
+                if self._cached_tail is None:
+                    row = conn.execute(
+                        "SELECT COALESCE(MAX(position)+1, 0) FROM log"
+                    ).fetchone()
+                    self._cached_tail = int(row[0])
+                base = self._cached_tail
+                rows = [(base + i, ts, p.type.value, p.to_json())
+                        for i, p in enumerate(payloads)]
+                try:
+                    with conn:  # one transaction per batch
+                        conn.executemany(
+                            "INSERT INTO log(position, realtime_ts, type, "
+                            "payload) VALUES (?, ?, ?, ?)", rows)
+                except sqlite3.IntegrityError:
+                    # Another process appended since we cached the tail.
+                    self._cached_tail = None
+                    continue
+                self._cached_tail = base + len(payloads)
+                return [r[0] for r in rows]
 
-    def read(self, start: int, end: Optional[int] = None) -> List[Entry]:
+    def _decode(self, pos: int, ts: float, payload_json: str) -> Entry:
+        with self._cache_lock:
+            e = self._decode_cache.get(pos)
+            if e is not None:
+                return e
+        e = Entry(pos, ts, Payload.from_json(payload_json))
+        with self._cache_lock:
+            if len(self._decode_cache) >= self._CACHE_MAX:
+                self._decode_cache.clear()  # simple epoch eviction
+            self._decode_cache[pos] = e
+        return e
+
+    def read(self, start: int, end: Optional[int] = None,
+             types: TypeFilter = None) -> List[Entry]:
         conn = self._conn()
-        if end is None:
-            rows = conn.execute(
-                "SELECT position, realtime_ts, payload FROM log "
-                "WHERE position >= ? ORDER BY position", (start,)).fetchall()
-        else:
-            rows = conn.execute(
-                "SELECT position, realtime_ts, payload FROM log "
-                "WHERE position >= ? AND position < ? ORDER BY position",
-                (start, end)).fetchall()
-        return [Entry(p, ts, Payload.from_json(pl)) for p, ts, pl in rows]
+        fs = _parse_types(types)
+        sql = ("SELECT position, realtime_ts, payload FROM log "
+               "WHERE position >= ?")
+        params: List[object] = [start]
+        if end is not None:
+            sql += " AND position < ?"
+            params.append(end)
+        if fs is not None:
+            sql += f" AND type IN ({','.join('?' * len(fs))})"
+            params.extend(sorted(t.value for t in fs))
+        sql += " ORDER BY position"
+        rows = conn.execute(sql, params).fetchall()
+        return [self._decode(p, ts, pl) for p, ts, pl in rows]
 
     def tail(self) -> int:
         row = self._conn().execute(
@@ -167,10 +330,7 @@ class SqliteBus(AgentBus):
         return int(row[0])
 
     def _wait_for_append(self, known_tail: int, timeout: Optional[float]) -> bool:
-        wait = self._POLL_INTERVAL if timeout is None else min(
-            self._POLL_INTERVAL, max(timeout, 0.0))
-        time.sleep(wait)
-        return self.tail() > known_tail
+        return self._backoff_wait(known_tail, timeout)
 
     def close(self) -> None:
         conn = getattr(self._local, "conn", None)
@@ -180,20 +340,30 @@ class SqliteBus(AgentBus):
 
 
 # ---------------------------------------------------------------------------
-# Disaggregated KV backend ("AnonDB" emulation)
+# Disaggregated KV backend ("AnonDB" emulation) — segmented log
 # ---------------------------------------------------------------------------
 
 class KvBus(AgentBus):
-    """Entry-per-object over a directory, emulating a remote KV/object store.
+    """Segmented log over a directory, emulating a remote KV/object store.
 
-    Position assignment uses atomic O_CREAT|O_EXCL file creation (compare-
-    and-set on the key ``entry-<pos>``) so multiple processes can append
-    concurrently and linearizably. ``latency_s`` injects a synthetic
-    round-trip per operation, for the geo-distributed-backend sweep
-    (paper Fig. 5 bottom).
+    Each ``append_many`` batch becomes one immutable segment object
+    ``seg-<start>.json`` holding the whole batch as a JSON array. Position
+    assignment is a compare-and-set on the segment's start position: the
+    segment is staged to a temp file and published with an atomic
+    ``os.link`` — if the link target exists, another appender won the slot
+    and we refresh the index and retry at the new tail. Because segments
+    only become visible fully written, readers never observe partial data.
+
+    A per-instance segment index (start -> entry count) is refreshed with a
+    single directory LIST; ``tail()`` is served from the index, and reads
+    fetch (and cache) one object per segment rather than one per entry.
+
+    ``latency_s`` injects a synthetic round-trip per *object* GET/PUT, for
+    the geo-distributed-backend sweep (paper Fig. 5 bottom): one PUT per
+    batch appended, one GET per segment fetched. LIST and segment-cache
+    hits are free (a local manifest hint). ``rtt_ops`` counts charged
+    round-trips so benchmarks can audit the model.
     """
-
-    _POLL_INTERVAL = 0.005
 
     def __init__(self, root: str, latency_s: float = 0.0,
                  fsync: bool = False) -> None:
@@ -201,63 +371,140 @@ class KvBus(AgentBus):
         self._latency = latency_s
         self._fsync = fsync
         os.makedirs(root, exist_ok=True)
-        self._tail_hint = 0
+        self._lock = threading.RLock()
+        self._segments: Dict[int, int] = {}      # start -> n entries
+        self._starts: List[int] = []             # sorted segment starts
+        self._seg_cache: Dict[int, List[Entry]] = {}  # start -> decoded
+        self._tail = 0
+        self.rtt_ops = 0  # charged GET/PUT round-trips
 
-    def _key(self, pos: int) -> str:
-        return os.path.join(self._root, f"entry-{pos:012d}.json")
+    def _seg_key(self, start: int) -> str:
+        return os.path.join(self._root, f"seg-{start:012d}.json")
 
-    def _rtt(self) -> None:
-        if self._latency > 0:
-            time.sleep(self._latency)
+    def _pay(self, ops: int) -> None:
+        """Sleep the injected latency for ``ops`` charged round-trips.
+        Called OUTSIDE the instance lock so concurrent clients' round-trips
+        overlap, as they would against a real remote store."""
+        if ops > 0 and self._latency > 0:
+            time.sleep(self._latency * ops)
 
-    def append(self, payload: Payload) -> int:
-        self._rtt()
-        pos = self.tail()
-        while True:
-            data = Entry(pos, time.time(), payload).to_json().encode()
-            try:
-                fd = os.open(self._key(pos), os.O_CREAT | os.O_EXCL | os.O_WRONLY)
-            except FileExistsError:
-                pos += 1  # lost the CAS race; retry at the next slot
+    def _fetch_segment(self, start: int) -> Optional[List[Entry]]:
+        """GET one segment object (counts one RTT; the latency is paid by
+        the caller outside the lock)."""
+        self.rtt_ops += 1
+        try:
+            with open(self._seg_key(start), "rb") as f:
+                data = f.read()
+        except FileNotFoundError:
+            return None
+        return [Entry.from_dict(r) for r in json.loads(data.decode())]
+
+    def _refresh(self) -> int:
+        """LIST the store and pull any segments we haven't seen (free LIST;
+        one charged GET per new segment, which primes the read cache).
+        Returns the number of GETs charged."""
+        ops = 0
+        try:
+            names = os.listdir(self._root)
+        except FileNotFoundError:  # pragma: no cover - root removed
+            return ops
+        new = sorted(
+            int(n[4:16]) for n in names
+            if n.startswith("seg-") and n.endswith(".json"))
+        for s in new:
+            if s in self._segments:
                 continue
-            try:
-                os.write(fd, data)
-                if self._fsync:
-                    os.fsync(fd)
-            finally:
-                os.close(fd)
-            self._tail_hint = max(self._tail_hint, pos + 1)
-            return pos
+            entries = self._fetch_segment(s)
+            ops += 1
+            if entries is None:  # pragma: no cover - raced deletion
+                continue
+            self._segments[s] = len(entries)
+            self._seg_cache[s] = entries
+        if len(self._segments) != len(self._starts):
+            self._starts = sorted(self._segments)
+            last = self._starts[-1]
+            self._tail = last + self._segments[last]
+        return ops
 
-    def read(self, start: int, end: Optional[int] = None) -> List[Entry]:
-        self._rtt()
-        out: List[Entry] = []
-        pos = max(0, start)
-        while end is None or pos < end:
-            key = self._key(pos)
-            try:
-                with open(key, "rb") as f:
-                    data = f.read()
-            except FileNotFoundError:
+    def append_many(self, payloads: Sequence[Payload]) -> List[int]:
+        if not payloads:
+            return []
+        ops = 0
+        with self._lock:
+            ops += self._refresh()
+            while True:
+                start = self._tail
+                now = time.time()
+                entries = [Entry(start + i, now, p)
+                           for i, p in enumerate(payloads)]
+                blob = json.dumps([e.to_dict() for e in entries],
+                                  sort_keys=True,
+                                  default=_json_default).encode()
+                tmp = os.path.join(self._root, f".tmp-{uuid.uuid4().hex}")
+                fd = os.open(tmp, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                try:
+                    os.write(fd, blob)
+                    if self._fsync:
+                        os.fsync(fd)
+                finally:
+                    os.close(fd)
+                self.rtt_ops += 1  # one PUT per publish attempt
+                ops += 1
+                try:
+                    os.link(tmp, self._seg_key(start))  # atomic CAS publish
+                except FileExistsError:
+                    os.unlink(tmp)
+                    ops += self._refresh()  # lost the race; retry at tail
+                    continue
+                os.unlink(tmp)
+                self._segments[start] = len(entries)
+                self._seg_cache[start] = entries
+                self._starts.append(start)
+                self._tail = start + len(entries)
+                positions = [e.position for e in entries]
                 break
-            if not data:  # writer created but hasn't written yet; stop here
-                break
-            out.append(Entry.from_json(data.decode()))
-            pos += 1
+        self._pay(ops)
+        return positions
+
+    def read(self, start: int, end: Optional[int] = None,
+             types: TypeFilter = None) -> List[Entry]:
+        fs = _parse_types(types)
+        start = max(0, start)
+        ops = 0
+        with self._lock:
+            if end is None or end > self._tail:
+                ops += self._refresh()
+            out: List[Entry] = []
+            i = bisect.bisect_right(self._starts, start) - 1
+            if i < 0:
+                i = 0
+            for s in self._starts[i:]:
+                if end is not None and s >= end:
+                    break
+                entries = self._seg_cache.get(s)
+                if entries is None:  # pragma: no cover - evicted
+                    entries = self._fetch_segment(s) or []
+                    ops += 1
+                    self._seg_cache[s] = entries
+                for e in entries:
+                    if e.position < start:
+                        continue
+                    if end is not None and e.position >= end:
+                        break
+                    if fs is None or e.type in fs:
+                        out.append(e)
+        self._pay(ops)
         return out
 
     def tail(self) -> int:
-        pos = self._tail_hint
-        while os.path.exists(self._key(pos)):
-            pos += 1
-        self._tail_hint = pos
-        return pos
+        with self._lock:
+            ops = self._refresh()
+            t = self._tail
+        self._pay(ops)
+        return t
 
     def _wait_for_append(self, known_tail: int, timeout: Optional[float]) -> bool:
-        wait = self._POLL_INTERVAL if timeout is None else min(
-            self._POLL_INTERVAL, max(timeout, 0.0))
-        time.sleep(wait)
-        return self.tail() > known_tail
+        return self._backoff_wait(known_tail, timeout)
 
 
 def make_bus(backend: str = "memory", path: Optional[str] = None,

@@ -138,11 +138,14 @@ class Decider:
         self.intent_policy.pop(iid, None)
         self.client.append(E.abort(iid, self.decider_id, reason))
 
+    #: the only entry types ``handle`` reacts to.
+    PLAY_TYPES = (PayloadType.POLICY, PayloadType.INTENT, PayloadType.VOTE)
+
     def play_available(self) -> int:
         tail = self.client.tail()
-        played = self.client.read(self.cursor, tail)
+        played = self.client.read(self.cursor, tail, types=self.PLAY_TYPES)
         for e in played:
             self.handle(e)
-        # advance over ACL-filtered (invisible) entries too
+        # advance over filtered (skipped/invisible) entries too
         self.cursor = max(self.cursor, tail)
         return len(played)

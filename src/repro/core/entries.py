@@ -80,19 +80,26 @@ class Entry:
     def body(self) -> Dict[str, Any]:
         return self.payload.body
 
-    def to_json(self) -> str:
-        return json.dumps(
-            {"position": self.position, "realtime_ts": self.realtime_ts,
-             "payload": {"type": self.payload.type.value,
-                         "body": self.payload.body}},
-            sort_keys=True, default=_json_default)
+    def to_dict(self) -> Dict[str, Any]:
+        """The wire schema — the single source of truth for every backend
+        (SQLite rows, KV segment records)."""
+        return {"position": self.position, "realtime_ts": self.realtime_ts,
+                "payload": {"type": self.payload.type.value,
+                            "body": self.payload.body}}
 
     @classmethod
-    def from_json(cls, s: str) -> "Entry":
-        d = json.loads(s)
+    def from_dict(cls, d: Dict[str, Any]) -> "Entry":
         return cls(position=d["position"], realtime_ts=d["realtime_ts"],
                    payload=Payload(PayloadType(d["payload"]["type"]),
                                    d["payload"]["body"]))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          default=_json_default)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Entry":
+        return cls.from_dict(json.loads(s))
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,7 @@ for, and ignores duplicate Commits (duplicate Deciders are legal).
 """
 from __future__ import annotations
 
+import copy
 import time
 import traceback
 from typing import Any, Callable, Dict, Optional, Set
@@ -53,10 +54,11 @@ class Executor:
         Before announcing, the executor conservatively scans the existing
         log so it knows which intents already have Results (at-most-once).
         """
-        for e in self.client.read(0):
+        for e in self.client.read(0, types=(PayloadType.INTENT,
+                                            PayloadType.RESULT)):
             if e.type == PayloadType.INTENT:
                 self.intents[e.body["intent_id"]] = e.body
-            elif e.type == PayloadType.RESULT and not e.body.get("recovered"):
+            elif not e.body.get("recovered"):
                 self.executed.add(e.body["intent_id"])
         self.cursor = self.client.tail()
         self.client.append(E.result(
@@ -100,7 +102,11 @@ class Executor:
             ok, value = False, {"error": f"no handler for kind {kind!r}"}
         else:
             try:
-                value = handler(args, self.env) or {}
+                # Handlers get a private deep copy: entry bodies read off
+                # the bus are shared, cached objects (all backends), and a
+                # handler mutating its args must not corrupt the in-process
+                # log view other components read.
+                value = handler(copy.deepcopy(args), self.env) or {}
                 ok = True
             except Exception as ex:  # noqa: BLE001 - report, don't crash
                 ok, value = False, {"error": repr(ex),
@@ -108,11 +114,16 @@ class Executor:
         self.exec_latency_s += time.monotonic() - t0
         self.client.append(E.result(iid, ok, value, self.executor_id))
 
+    #: the only entry types ``handle`` reacts to (all within the executor
+    #: role's read permissions).
+    PLAY_TYPES = (PayloadType.POLICY, PayloadType.INTENT,
+                  PayloadType.RESULT, PayloadType.COMMIT)
+
     def play_available(self) -> int:
         tail = self.client.tail()
-        played = self.client.read(self.cursor, tail)
+        played = self.client.read(self.cursor, tail, types=self.PLAY_TYPES)
         for e in played:
             self.handle(e)
-        # advance over ACL-filtered (invisible) entries too
+        # advance over filtered (skipped/invisible) entries too
         self.cursor = max(self.cursor, tail)
         return len(played)

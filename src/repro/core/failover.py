@@ -25,7 +25,7 @@ from typing import Any, Callable, Dict, Optional
 from .acl import BusClient
 from .bus import AgentBus
 from .executor import Executor, Handler
-from .introspect import health_check, trace_intents
+from .introspect import BusObserver, health_check
 
 
 class StandbyExecutor:
@@ -44,6 +44,8 @@ class StandbyExecutor:
         self.clock = clock
         self.active: Optional[Executor] = None
         self.takeover_reason: Optional[str] = None
+        # Incremental watch: each check() folds only the new log suffix.
+        self._observer = BusObserver(bus)
 
     # -- detection -----------------------------------------------------------
     def check(self) -> Optional[str]:
@@ -51,14 +53,16 @@ class StandbyExecutor:
         if self.active is not None:
             return None
         now = self.clock()
-        for t in trace_intents(self.bus.read(0)):
+        self._observer.refresh()
+        for t in self._observer.traces():
             if t.decision == "commit" and t.result is None:
                 # committed intention with no Result: how stale is it?
                 committed_ts = max(t.intent_ts, 0.0)
                 if now - committed_ts > self.timeout:
                     return (f"intent {t.intent_id} committed "
                             f"{now - committed_ts:.1f}s ago with no result")
-        hc = health_check(self.bus, slow_factor=self.slow_factor)
+        hc = health_check(self.bus, slow_factor=self.slow_factor,
+                          observer=self._observer)
         if hc["verdict"] in ("failing",):
             return f"health check: {hc['verdict']} ({hc['reasons']})"
         return None

@@ -5,15 +5,28 @@ the "inference" is implemented as structured analysis over the typed log —
 the same information flow (entire execution history, not token-only
 trajectories), feeding semantic recovery, semantic health checks, and the
 swarm Supervisor.
+
+``BusObserver`` is the incremental form: it maintains a cursor over the
+log and folds newly appended entries into running aggregates and
+``IntentTrace`` lifecycles, so long-lived observers (Supervisors, standby
+executors, health checkers) pay O(new entries) per sweep rather than
+re-reading and re-decoding the full log every time. The stateless
+``summarize_bus`` / ``health_check`` entry points are thin wrappers over a
+one-shot observer.
 """
 from __future__ import annotations
 
 import statistics
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from .bus import AgentBus
 from .entries import Entry, PayloadType
+
+#: the entry types that participate in intent lifecycles — the natural
+#: push-down filter for trace-only scans (recovery, failover detection).
+TRACE_TYPES = (PayloadType.INTENT, PayloadType.VOTE, PayloadType.COMMIT,
+               PayloadType.ABORT, PayloadType.RESULT)
 
 
 @dataclass
@@ -37,83 +50,133 @@ class IntentTrace:
         return self.result_ts - self.intent_ts
 
 
+def _fold_trace(traces: Dict[str, IntentTrace], order: List[str],
+                e: Entry) -> None:
+    b = e.body
+    if e.type == PayloadType.INTENT:
+        iid = b["intent_id"]
+        if iid not in traces:
+            traces[iid] = IntentTrace(iid, b["kind"], b.get("args", {}),
+                                      e.position, intent_ts=e.realtime_ts)
+            order.append(iid)
+    elif e.type == PayloadType.VOTE:
+        t = traces.get(b["intent_id"])
+        if t:
+            t.votes.append(b)
+    elif e.type == PayloadType.COMMIT:
+        t = traces.get(b["intent_id"])
+        if t and t.decision is None:
+            t.decision = "commit"
+    elif e.type == PayloadType.ABORT:
+        t = traces.get(b["intent_id"])
+        if t and t.decision is None:
+            t.decision = "abort"
+    elif e.type == PayloadType.RESULT and not b.get("recovered"):
+        t = traces.get(b["intent_id"])
+        if t:
+            t.result = b
+            t.result_ts = e.realtime_ts
+
+
 def trace_intents(entries: Sequence[Entry]) -> List[IntentTrace]:
     traces: Dict[str, IntentTrace] = {}
     order: List[str] = []
     for e in entries:
-        b = e.body
-        if e.type == PayloadType.INTENT:
-            iid = b["intent_id"]
-            if iid not in traces:
-                traces[iid] = IntentTrace(iid, b["kind"], b.get("args", {}),
-                                          e.position, intent_ts=e.realtime_ts)
-                order.append(iid)
-        elif e.type == PayloadType.VOTE:
-            t = traces.get(b["intent_id"])
-            if t:
-                t.votes.append(b)
-        elif e.type == PayloadType.COMMIT:
-            t = traces.get(b["intent_id"])
-            if t and t.decision is None:
-                t.decision = "commit"
-        elif e.type == PayloadType.ABORT:
-            t = traces.get(b["intent_id"])
-            if t and t.decision is None:
-                t.decision = "abort"
-        elif e.type == PayloadType.RESULT and not b.get("recovered"):
-            t = traces.get(b["intent_id"])
-            if t:
-                t.result = b
-                t.result_ts = e.realtime_ts
+        _fold_trace(traces, order, e)
     return [traces[i] for i in order]
 
 
-def summarize_bus(bus: AgentBus, start: int = 0) -> Dict[str, Any]:
-    """A semantic summary of an agent's activity — what a Supervisor reads."""
-    entries = bus.read(start)
-    traces = trace_intents(entries)
-    by_type: Dict[str, int] = {}
-    bytes_by_type: Dict[str, int] = {}
-    for e in entries:
-        by_type[e.type.value] = by_type.get(e.type.value, 0) + 1
-        bytes_by_type[e.type.value] = (bytes_by_type.get(e.type.value, 0)
+class BusObserver:
+    """Incremental introspection over one bus: cursor + running aggregates.
+
+    ``refresh()`` reads only ``[cursor, tail)`` and folds the new entries
+    into per-type counters, byte tallies, and intent traces. All derived
+    views (``traces()``, ``summary()``) are computed from the folded state.
+    An optional ``on_entry`` callback lets a caller piggyback its own
+    per-entry analysis on the same single read of the suffix (e.g. the
+    Supervisor's fix harvesting) instead of maintaining a second cursor.
+    """
+
+    def __init__(self, bus: AgentBus, start: int = 0,
+                 on_entry: Optional[Callable[[Entry], None]] = None) -> None:
+        self.bus = bus
+        self.cursor = start
+        self.on_entry = on_entry
+        self._traces: Dict[str, IntentTrace] = {}
+        self._order: List[str] = []
+        self._by_type: Dict[str, int] = {}
+        self._bytes_by_type: Dict[str, int] = {}
+
+    def refresh(self) -> int:
+        """Fold all newly appended entries; returns how many were new."""
+        tail = self.bus.tail()
+        new = self.bus.read(self.cursor, tail)
+        for e in new:
+            tv = e.type.value
+            self._by_type[tv] = self._by_type.get(tv, 0) + 1
+            self._bytes_by_type[tv] = (self._bytes_by_type.get(tv, 0)
                                        + len(e.payload.to_json()))
-    completed = [t for t in traces if t.result is not None]
-    failed = [t for t in completed if not t.result.get("ok", False)]
-    lat = [t.latency_s for t in completed if t.latency_s == t.latency_s]
-    return {
-        "tail": bus.tail(),
-        "entries_by_type": by_type,
-        "bytes_by_type": bytes_by_type,
-        "total_bytes": sum(bytes_by_type.values()),
-        "n_intents": len(traces),
-        "n_committed": sum(1 for t in traces if t.decision == "commit"),
-        "n_aborted": sum(1 for t in traces if t.decision == "abort"),
-        "n_completed": len(completed),
-        "n_failed": len(failed),
-        "mean_latency_s": statistics.fmean(lat) if lat else 0.0,
-        "p90_latency_s": (sorted(lat)[int(0.9 * (len(lat) - 1))] if lat else 0.0),
-        "inflight": [t.intent_id for t in traces
-                     if t.decision == "commit" and t.result is None],
-        "last_kinds": [t.kind for t in traces[-8:]],
-        "work_claims": sorted({tuple(t.args["work_range"])
-                               for t in traces
-                               if "work_range" in t.args
-                               and t.decision == "commit"}),
-        "completed_work": sorted({tuple(t.args["work_range"])
-                                  for t in completed
-                                  if "work_range" in t.args
-                                  and t.result.get("ok")}),
-    }
+            _fold_trace(self._traces, self._order, e)
+            if self.on_entry is not None:
+                self.on_entry(e)
+        self.cursor = max(self.cursor, tail)
+        return len(new)
+
+    def traces(self) -> List[IntentTrace]:
+        return [self._traces[i] for i in self._order]
+
+    def summary(self) -> Dict[str, Any]:
+        traces = self.traces()
+        completed = [t for t in traces if t.result is not None]
+        failed = [t for t in completed if not t.result.get("ok", False)]
+        lat = [t.latency_s for t in completed if t.latency_s == t.latency_s]
+        return {
+            "tail": self.cursor,
+            "entries_by_type": dict(self._by_type),
+            "bytes_by_type": dict(self._bytes_by_type),
+            "total_bytes": sum(self._bytes_by_type.values()),
+            "n_intents": len(traces),
+            "n_committed": sum(1 for t in traces if t.decision == "commit"),
+            "n_aborted": sum(1 for t in traces if t.decision == "abort"),
+            "n_completed": len(completed),
+            "n_failed": len(failed),
+            "mean_latency_s": statistics.fmean(lat) if lat else 0.0,
+            "p90_latency_s": (sorted(lat)[int(0.9 * (len(lat) - 1))]
+                              if lat else 0.0),
+            "inflight": [t.intent_id for t in traces
+                         if t.decision == "commit" and t.result is None],
+            "last_kinds": [t.kind for t in traces[-8:]],
+            "work_claims": sorted({tuple(t.args["work_range"])
+                                   for t in traces
+                                   if "work_range" in t.args
+                                   and t.decision == "commit"}),
+            "completed_work": sorted({tuple(t.args["work_range"])
+                                      for t in completed
+                                      if "work_range" in t.args
+                                      and t.result.get("ok")}),
+        }
+
+
+def summarize_bus(bus: AgentBus, start: int = 0) -> Dict[str, Any]:
+    """A semantic summary of an agent's activity — what a Supervisor reads.
+    One-shot form; long-lived callers should hold a ``BusObserver``."""
+    obs = BusObserver(bus, start)
+    obs.refresh()
+    return obs.summary()
 
 
 def health_check(bus: AgentBus, peer_summaries: Sequence[Dict[str, Any]] = (),
-                 slow_factor: float = 3.0) -> Dict[str, Any]:
+                 slow_factor: float = 3.0,
+                 observer: Optional[BusObserver] = None) -> Dict[str, Any]:
     """Semantic health check (paper §5.3): inspects per-intent latency in
     the log; compares against the agent's own history and peers; flags a
-    straggler before a takeover."""
-    s = summarize_bus(bus)
-    traces = [t for t in trace_intents(bus.read(0)) if t.result is not None]
+    straggler before a takeover. Pass a long-lived ``observer`` to make the
+    scan incremental (one read of the new suffix instead of two full-log
+    reads)."""
+    obs = observer if observer is not None else BusObserver(bus)
+    obs.refresh()
+    s = obs.summary()
+    traces = [t for t in obs.traces() if t.result is not None]
     verdict = "healthy"
     reasons: List[str] = []
     if s["inflight"]:

@@ -25,7 +25,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 from .bus import AgentBus
 from .driver import Planner
 from .entries import PayloadType
-from .introspect import trace_intents
+from .introspect import TRACE_TYPES, trace_intents
 
 OptimizerHook = Callable[[Dict[str, Any]], Optional[Dict[str, Any]]]
 # hook(original_intent_body) -> replacement args (or None if no fix applies)
@@ -66,9 +66,10 @@ class RecoveryPlanner(Planner):
         self.phase = "probe"
         self.probe_result: Optional[Dict[str, Any]] = None
         self.plan_notes: List[str] = []
-        # Introspect only the intentions of the original bus (paper §5.3).
-        intents = [e.body for e in self.original.read(0)
-                   if e.type == PayloadType.INTENT]
+        # Introspect only the intentions of the original bus (paper §5.3);
+        # the type filter is pushed down so InfIn/InfOut blobs never load.
+        intents = [e.body for e in
+                   self.original.read(0, types=(PayloadType.INTENT,))]
         self.original_intents = intents
         self.work_intent = next(
             (b for b in reversed(intents) if "work_range" in b.get("args", {})),
@@ -122,5 +123,5 @@ def committed_unexecuted(bus: AgentBus) -> List[Dict[str, Any]]:
     """WAL-style scan: committed intentions without a Result — the at-most-
     once candidates a recovering executor must treat as 'state unknown'."""
     return [t.args | {"intent_id": t.intent_id, "kind": t.kind}
-            for t in trace_intents(bus.read(0))
+            for t in trace_intents(bus.read(0, types=TRACE_TYPES))
             if t.decision == "commit" and t.result is None]

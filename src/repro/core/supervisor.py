@@ -13,7 +13,7 @@ from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 from .acl import BusClient
 from .bus import AgentBus
 from .entries import PayloadType, mail
-from .introspect import health_check, summarize_bus
+from .introspect import BusObserver, health_check
 
 
 class Supervisor:
@@ -22,26 +22,33 @@ class Supervisor:
         self.workers = dict(worker_buses)
         self.clients = {name: BusClient(bus, supervisor_id, "supervisor")
                         for name, bus in self.workers.items()}
+        # Incremental per-worker introspection: each sweep folds only the
+        # log suffix appended since the last sweep (no full-log re-reads).
+        # Fix harvesting piggybacks on the same read via on_entry.
+        self._observers = {name: BusObserver(bus, on_entry=self._harvest_fix)
+                           for name, bus in self.workers.items()}
         self.known_fixes: Dict[str, str] = {}   # issue -> fix text
         self.sent_fixes: Dict[str, Set[str]] = {n: set() for n in self.workers}
         self.claimed: Dict[Tuple[int, int], str] = {}  # work_range -> worker
         self._claims_sent: Dict[str, Set[Tuple[int, int]]] = {}
         self.mail_sent = 0
 
+    def _harvest_fix(self, e) -> None:
+        """Observer hook: workers publish explicit fix notes in result
+        values ({"fix": {...}}); harvest them while the observer folds the
+        new suffix — one read, one cursor per worker."""
+        if e.type != PayloadType.RESULT:
+            return
+        fix = e.body.get("value", {}).get("fix")
+        if fix:
+            self.known_fixes[str(fix.get("issue"))] = str(fix.get("remedy"))
+
     def sweep(self) -> Dict[str, Any]:
         """One introspection round over the fleet. Returns the fleet view."""
-        summaries = {n: summarize_bus(b) for n, b in self.workers.items()}
-        # 1) Harvest fixes: a worker that failed then succeeded on the same
-        #    kind has implicitly discovered a fix; workers also publish
-        #    explicit fix notes in result values ({"fix": {...}}).
-        for name, bus in self.workers.items():
-            for e in bus.read(0):
-                if e.type != PayloadType.RESULT:
-                    continue
-                fix = e.body.get("value", {}).get("fix")
-                if fix:
-                    self.known_fixes[str(fix.get("issue"))] = str(
-                        fix.get("remedy"))
+        # 1) Refresh every worker's observer (fix harvesting rides along).
+        for obs in self._observers.values():
+            obs.refresh()
+        summaries = {n: obs.summary() for n, obs in self._observers.items()}
         # 2) Broadcast fixes each worker hasn't seen yet.
         for name in self.workers:
             for issue, remedy in self.known_fixes.items():
@@ -77,11 +84,13 @@ class Supervisor:
                     sender="supervisor", claims_snapshot=fresh))
                 seen.update(tuple(r) for r in fresh)
                 self.mail_sent += 1
-        # 4) Health: flag stragglers relative to the fleet.
+        # 4) Health: flag stragglers relative to the fleet (reusing each
+        #    worker's observer — no extra log reads).
         health = {}
         for name, bus in self.workers.items():
             peer = [s for n, s in summaries.items() if n != name]
-            health[name] = health_check(bus, peer_summaries=peer)
+            health[name] = health_check(bus, peer_summaries=peer,
+                                        observer=self._observers[name])
         return {"summaries": summaries, "health": health,
                 "known_fixes": dict(self.known_fixes),
                 "claimed": {str(k): v for k, v in self.claimed.items()},

@@ -83,12 +83,16 @@ class Voter:
 
     # -- play loop helpers ---------------------------------------------------
     def play_available(self) -> int:
-        """Synchronously play all new entries; returns #entries played."""
+        """Synchronously play all new relevant entries (INTENT + POLICY +
+        this voter's ``observe_types``, filtered at the backend); returns
+        #entries played."""
         tail = self.client.tail()
-        played = self.client.read(self.cursor, tail)
+        types = (PayloadType.POLICY, PayloadType.INTENT,
+                 *self.observe_types)
+        played = self.client.read(self.cursor, tail, types=types)
         for e in played:
             self.handle(e)
-        # advance over ACL-filtered (invisible) entries too
+        # advance over filtered (skipped/invisible) entries too
         self.cursor = max(self.cursor, tail)
         return len(played)
 

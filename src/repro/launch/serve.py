@@ -8,7 +8,7 @@ import argparse
 
 from ..configs.base import ALIASES, ARCH_IDS, get_config, smoke
 from ..core.acl import BusClient
-from ..core.introspect import summarize_bus, trace_intents
+from ..core.introspect import TRACE_TYPES, summarize_bus, trace_intents
 from ..core.voter import RuleVoter, STANDARD_RULES
 from ..serving.server import build_serving_agent
 
@@ -33,7 +33,7 @@ def main() -> None:
         agent.send_mail(f"req-{r}", prompt_tokens=[1 + r, 2 + r, 3 + r])
     agent.run_until_idle(max_rounds=10 ** 6)
     served = 0
-    for t in trace_intents(agent.bus.read(0)):
+    for t in trace_intents(agent.bus.read(0, types=TRACE_TYPES)):
         if t.kind == "serve_batch" and t.result and t.result["ok"]:
             served += t.result["value"]["batch"]
             print(f"batch of {t.result['value']['batch']} "

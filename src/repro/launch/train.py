@@ -14,7 +14,7 @@ import tempfile
 from ..configs.base import ALIASES, ARCH_IDS, get_config, smoke
 from ..core.acl import BusClient
 from ..core.bus import MemoryBus, make_bus
-from ..core.introspect import summarize_bus, trace_intents
+from ..core.introspect import TRACE_TYPES, summarize_bus, trace_intents
 from ..core.voter import RuleVoter, StatVoter, STANDARD_RULES
 from ..data.pipeline import DataConfig
 from ..optim.optimizer import OptimizerConfig
@@ -68,7 +68,8 @@ def main() -> None:
     agent.send_mail(f"train {args.arch} for {args.steps} steps")
     agent.run_until_idle(max_rounds=10 ** 6)
 
-    losses = [t.result["value"]["loss"] for t in trace_intents(bus.read(0))
+    losses = [t.result["value"]["loss"]
+              for t in trace_intents(bus.read(0, types=TRACE_TYPES))
               if t.kind == "train_chunk" and t.result and t.result["ok"]]
     s = summarize_bus(bus)
     print(f"arch={cfg.arch_id} steps={env.step}/{args.steps} "

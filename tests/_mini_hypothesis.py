@@ -1,0 +1,133 @@
+"""Deterministic fallback for `hypothesis` when it isn't installed.
+
+The test suite uses a small slice of the hypothesis API (`given`,
+`settings`, and a handful of strategies). This shim reproduces that slice
+with a seeded PRNG so property tests still run `max_examples` randomized
+cases per test, deterministically across runs (seeded from the test's
+qualified name via crc32, not the randomized builtin `hash`).
+
+It is only installed into ``sys.modules`` by ``conftest.py`` when the real
+package is unavailable; with hypothesis installed, the tests use it
+unchanged.
+"""
+from __future__ import annotations
+
+import random as _random
+import types as _types
+import zlib as _zlib
+
+_DEFAULT_EXAMPLES = 20
+_TEXT_ALPHABET = "abcdefghijklmnopqrstuvwxyzABCDEFGHIJ0123456789_-"
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: _random.Random):
+        return self._draw(rng)
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda r: items[r.randrange(len(items))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def integers(min_value=None, max_value=None) -> _Strategy:
+    lo = -(2 ** 31) if min_value is None else min_value
+    hi = 2 ** 31 - 1 if max_value is None else max_value
+    return _Strategy(lambda r: r.randint(lo, hi))
+
+
+def floats(min_value=None, max_value=None, allow_nan=True,
+           allow_infinity=True, **_kw) -> _Strategy:
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+    return _Strategy(lambda r: r.uniform(lo, hi))
+
+
+def text(alphabet=None, min_size=0, max_size=10) -> _Strategy:
+    chars = list(alphabet) if alphabet else list(_TEXT_ALPHABET)
+
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return "".join(chars[r.randrange(len(chars))] for _ in range(n))
+    return _Strategy(draw)
+
+
+def lists(elements: _Strategy, min_size=0, max_size=10, **_kw) -> _Strategy:
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return [elements.example(r) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda r: tuple(s.example(r) for s in elements))
+
+
+def dictionaries(keys: _Strategy, values: _Strategy, min_size=0,
+                 max_size=10, **_kw) -> _Strategy:
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return {keys.example(r): values.example(r) for _ in range(n)}
+    return _Strategy(draw)
+
+
+def one_of(*strats) -> _Strategy:
+    flat = []
+    for s in strats:
+        flat.extend(s) if isinstance(s, (list, tuple)) else flat.append(s)
+    return _Strategy(lambda r: flat[r.randrange(len(flat))].example(r))
+
+
+def permutations(seq) -> _Strategy:
+    items = list(seq)
+
+    def draw(r):
+        out = list(items)
+        r.shuffle(out)
+        return out
+    return _Strategy(draw)
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._mini_hypothesis_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        def runner():
+            # @settings sits above @given, so the settings marker lands on
+            # `runner`; read it at call time.
+            cfg = getattr(runner, "_mini_hypothesis_settings", {})
+            n = cfg.get("max_examples", _DEFAULT_EXAMPLES)
+            seed = _zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = _random.Random(seed)
+            for _ in range(n):
+                args = [s.example(rng) for s in arg_strats]
+                kwargs = {k: s.example(rng) for k, s in kw_strats.items()}
+                fn(*args, **kwargs)
+        # No functools.wraps: pytest must see a zero-argument callable
+        # (copying __wrapped__ would re-expose the strategy parameters as
+        # fixture requests).
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return deco
+
+
+strategies = _types.ModuleType("hypothesis.strategies")
+for _name in ("sampled_from", "booleans", "integers", "floats", "text",
+              "lists", "tuples", "dictionaries", "one_of", "permutations"):
+    setattr(strategies, _name, globals()[_name])

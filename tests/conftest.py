@@ -5,3 +5,14 @@ import sys
 # for launch/dryrun.py, which sets it before importing jax).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# Property tests prefer the real hypothesis; fall back to the deterministic
+# mini-shim when it isn't installed (the CI image has no network access).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _mini_hypothesis
+
+    sys.modules["hypothesis"] = _mini_hypothesis
+    sys.modules["hypothesis.strategies"] = _mini_hypothesis.strategies
