@@ -1,14 +1,23 @@
-"""Fig-8 reproduction: semantic recovery / health check / optimization.
+"""Fig-8 reproduction: semantic recovery / health check / optimization,
+plus the snapshot-anchored recovery benchmark (§3.2 lifecycle).
 
-A worker agent checksums N work units with a pathological implementation
-(per-unit directory rescan + sleep — the paper's sorted(rglob) analogue on
-a network FS) and is killed by a watchdog timeout mid-task. A recovery
-agent introspects the original bus ("inspect only the intentions"),
-probes the environment for completed work, fixes the implementation
-(rglob->scandir hook), resumes WITHOUT redoing work, and verifies.
+Part 1 (Fig 8): a worker agent checksums N work units with a pathological
+implementation (per-unit directory rescan + sleep — the paper's
+sorted(rglob) analogue on a network FS) and is killed by a watchdog
+timeout mid-task. A recovery agent introspects the original bus ("inspect
+only the intentions"), probes the environment for completed work, fixes
+the implementation (rglob->scandir hook), resumes WITHOUT redoing work,
+and verifies.
 
-Reported: per-phase wall-times, units processed before/after, and the
-slow-vs-fast per-unit speedup (the paper reports 290x on 816 folders).
+Part 2 (lifecycle): on a >=10k-entry log, compare a recovering component
+that replays from position 0 against one that bootstraps from its latest
+snapshot and replays only the post-checkpoint suffix — both
+entries-replayed and wall-clock must be strictly lower for the
+snapshot-anchored path.
+
+Reported: per-phase wall-times, units processed before/after, the
+slow-vs-fast per-unit speedup (the paper reports 290x on 816 folders),
+and the replay-from-0 vs snapshot-anchored recovery costs.
 """
 from __future__ import annotations
 
@@ -18,15 +27,21 @@ import tempfile
 import time
 from typing import Any, Dict, List
 
+from repro.core.acl import BusClient
 from repro.core.agent import LogActAgent
 from repro.core.bus import MemoryBus
-from repro.core.driver import ScriptPlanner
+from repro.core.decider import Decider
+from repro.core.driver import Driver, ScriptPlanner
 from repro.core.introspect import health_check, trace_intents
 from repro.core.recovery import RecoveryPlanner
+from repro.core.snapshot import MemorySnapshotStore
 
-N_UNITS = 400
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+
+N_UNITS = 80 if QUICK else 400
 SLOW_SLEEP = 0.004     # per-unit pathology (network-FS rescan stand-in)
-KILL_AFTER = 200       # watchdog kills the slow worker here
+KILL_AFTER = N_UNITS // 2  # watchdog kills the slow worker here
+N_INTENTS = 300 if QUICK else 2200  # lifecycle bench: >=10k entries full
 
 
 def setup_units(root: str) -> None:
@@ -146,6 +161,97 @@ def main(rows: List[str]) -> None:
         rows.append(f"recovery.speedup,{per_unit_fast*1e6:.1f},"
                     f"speedup={speedup:.0f}x_units={fast['units']}")
         rows.append(f"recovery.window,{t_rec*1e6:.0f},s={t_rec:.2f}")
+
+    bench_snapshot_anchored(rows)
+
+
+def bench_snapshot_anchored(rows: List[str]) -> None:
+    """Lifecycle acceptance: snapshot-anchored recovery replays only the
+    post-checkpoint suffix — strictly fewer entries and strictly less
+    wall-clock than replay-from-0 on a large log."""
+    print(f"\n# lifecycle: snapshot-anchored vs replay-from-0 recovery "
+          f"({N_INTENTS} intents)")
+    bus = MemoryBus()
+    snaps = MemorySnapshotStore()
+    env = {"n": 0}
+    plans = [{"intent": {"kind": "bump", "args": {"i": i}}}
+             for i in range(N_INTENTS)]
+    plans.append({"done": True})
+    agent = LogActAgent(
+        bus=bus, planner=ScriptPlanner(plans), env=env,
+        handlers={"bump": lambda a, e: e.__setitem__("n", e["n"] + 1)
+                  or {"n": e["n"]}},
+        snapshot_store=snaps)
+    agent.send_mail("go")
+    # run to ~95%, checkpoint there (the recovering component replays the
+    # remaining ~5% suffix), then finish
+    target = int(N_INTENTS * 0.95)
+    while not agent.driver.idle:
+        agent.tick()
+        if agent.driver.n_intents >= target:
+            break
+    agent.snapshot()
+    agent.run_until_idle(max_rounds=10 ** 6)
+    tail = bus.tail()
+    assert env["n"] == N_INTENTS
+    if not QUICK:
+        assert tail >= 10_000, tail
+
+    def best_of(fn, reps=3):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.monotonic()
+            fn()
+            best = min(best, time.monotonic() - t0)
+        return best
+
+    # replay-from-0: a fresh Decider + Driver pair replays the full log
+    def replay_from_zero():
+        d = Decider(BusClient(bus, f"{agent.agent_id}-decider", "decider"))
+        d.bootstrap(None)  # no snapshots: anchors at trim base 0
+        d.play_available()
+        dr = Driver(BusClient(bus, f"{agent.agent_id}-driver", "driver"),
+                    ScriptPlanner([]), driver_id=agent.driver.driver_id,
+                    elect=False)
+        dr.play_available()
+        assert dr.done and d.cursor == dr.cursor == tail
+
+    # snapshot-anchored: bootstrap from the checkpoint, replay the suffix
+    anchored = {}
+
+    def replay_anchored():
+        d = Decider(BusClient(bus, f"{agent.agent_id}-decider", "decider"))
+        anchored["decider"] = d.bootstrap(snaps)
+        d.play_available()
+        dr = Driver(BusClient(bus, f"{agent.agent_id}-driver", "driver"),
+                    ScriptPlanner([]), driver_id=agent.driver.driver_id,
+                    elect=False)
+        anchored["driver"] = dr.bootstrap(snaps)
+        dr.play_available()
+        assert dr.done and d.cursor == dr.cursor == tail
+
+    pre = bus.tail()
+    t_zero = best_of(replay_from_zero)
+    t_anchor = best_of(replay_anchored)
+    assert bus.tail() == pre  # every replay was silent
+    entries_zero = 2 * tail  # decider + driver each scan [0, tail)
+    entries_anchor = sum(tail - p for p in anchored.values())
+    print(f"  log tail: {tail} entries; checkpoint at "
+          f"decider={anchored['decider']} driver={anchored['driver']}")
+    print(f"  replay-from-0:     {entries_zero:>7} entries scanned, "
+          f"{t_zero * 1e3:8.2f} ms")
+    print(f"  snapshot-anchored: {entries_anchor:>7} entries scanned, "
+          f"{t_anchor * 1e3:8.2f} ms "
+          f"({entries_zero / max(entries_anchor, 1):.1f}x fewer, "
+          f"{t_zero / max(t_anchor, 1e-9):.1f}x faster)")
+    # acceptance: strictly below on both axes
+    assert entries_anchor < entries_zero
+    assert t_anchor < t_zero
+    rows.append(f"recovery.replay_from_0,{t_zero * 1e6:.0f},"
+                f"entries={entries_zero}")
+    rows.append(f"recovery.snapshot_anchored,{t_anchor * 1e6:.0f},"
+                f"entries={entries_anchor}_"
+                f"speedup={t_zero / max(t_anchor, 1e-9):.1f}x")
 
 
 if __name__ == "__main__":

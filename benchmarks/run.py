@@ -9,32 +9,53 @@
   bench_swarm     -> Fig 9 (supervisor swarm: +work, -tokens)
   bench_roofline  -> framework roofline table from dry-run artifacts
 
-Prints a final ``name,us_per_call,derived`` CSV block.
+Prints a final ``name,us_per_call,derived`` CSV block; ``--json PATH``
+additionally writes the rows as structured JSON. ``--quick`` runs a small
+smoke subset with shrunk sizes (sets ``REPRO_BENCH_QUICK=1``; used by CI).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
-from . import (bench_bus_throughput, bench_hotswap, bench_overhead,
-               bench_recovery, bench_roofline, bench_swarm, bench_voters)
-
-BENCHES = [
-    ("bus_throughput", bench_bus_throughput.main),
-    ("overhead", bench_overhead.main),
-    ("voters", bench_voters.main),
-    ("hotswap", bench_hotswap.main),
-    ("recovery", bench_recovery.main),
-    ("swarm", bench_swarm.main),
-    ("roofline", bench_roofline.main),
-]
+#: benches exercised by the --quick CI smoke (hermetic, seconds not minutes)
+QUICK = ("bus_throughput", "hotswap", "recovery")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke subset with shrunk sizes (CI)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also dump the CSV rows as JSON to PATH")
+    args = ap.parse_args(argv)
+    if args.quick:
+        # set before bench modules read it (they resolve sizes at import
+        # or call time; env is the contract either way)
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+
+    from . import (bench_bus_throughput, bench_hotswap, bench_overhead,
+                   bench_recovery, bench_roofline, bench_swarm,
+                   bench_voters)
+    benches = [
+        ("bus_throughput", bench_bus_throughput.main),
+        ("overhead", bench_overhead.main),
+        ("voters", bench_voters.main),
+        ("hotswap", bench_hotswap.main),
+        ("recovery", bench_recovery.main),
+        ("swarm", bench_swarm.main),
+        ("roofline", bench_roofline.main),
+    ]
+    if args.quick:
+        benches = [(n, f) for n, f in benches if n in QUICK]
+
     rows: list = []
     failures = []
-    for name, fn in BENCHES:
+    for name, fn in benches:
         print(f"\n{'=' * 72}\n== bench_{name}\n{'=' * 72}")
         t0 = time.monotonic()
         try:
@@ -46,10 +67,20 @@ def main() -> None:
     print(f"\n{'=' * 72}\n== CSV (name,us_per_call,derived)\n{'=' * 72}")
     for r in rows:
         print(r)
+    if args.json:
+        records = []
+        for r in rows:
+            name, us, derived = (r.split(",", 2) + ["", ""])[:3]
+            records.append({"name": name, "us_per_call": float(us),
+                            "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump({"quick": bool(args.quick), "rows": records}, f,
+                      indent=2)
+        print(f"wrote {len(records)} rows to {args.json}")
     if failures:
         print(f"\nFAILED benches: {failures}")
         sys.exit(1)
-    print(f"\nall {len(BENCHES)} benches passed; {len(rows)} CSV rows")
+    print(f"\nall {len(benches)} benches passed; {len(rows)} CSV rows")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,8 @@ machine (Driver / Voter / Decider / Executor), per the paper."""
 from . import entries
 from .acl import AclError, BusClient, Permissions, ROLES
 from .agent import LogActAgent
-from .bus import AgentBus, KvBus, MemoryBus, SqliteBus, make_bus
+from .bus import (AgentBus, KvBus, MemoryBus, SqliteBus, TrimmedError,
+                  make_bus)
 from .decider import Decider
 from .driver import Driver, Planner, ScriptPlanner
 from .entries import Entry, Payload, PayloadType
@@ -11,7 +12,9 @@ from .executor import Executor
 from .failover import ElasticWorkerPool, StandbyExecutor
 from .introspect import (BusObserver, TRACE_TYPES, health_check,
                          summarize_bus, trace_intents)
-from .kernel import AgentKernel, AGENT_IMAGES, VOTER_LIBRARY, register_image
+from .kernel import (AgentKernel, AGENT_IMAGES, TrimPolicy, VOTER_LIBRARY,
+                     register_image)
+from .lifecycle import CheckpointCoordinator, Recoverable
 from .policy import DeciderPolicy, PolicyState
 from .recovery import RecoveryPlanner, committed_unexecuted
 from .snapshot import DirSnapshotStore, MemorySnapshotStore, SnapshotStore
@@ -21,12 +24,15 @@ from .voter import (RuleVoter, StatVoter, Voter, VoteDecision,
 
 __all__ = [
     "entries", "AclError", "BusClient", "Permissions", "ROLES",
-    "LogActAgent", "AgentBus", "KvBus", "MemoryBus", "SqliteBus", "make_bus",
+    "LogActAgent", "AgentBus", "KvBus", "MemoryBus", "SqliteBus",
+    "TrimmedError", "make_bus",
     "Decider", "Driver", "Planner", "ScriptPlanner", "Entry", "Payload",
     "PayloadType", "Executor", "health_check", "summarize_bus",
     "trace_intents", "BusObserver", "TRACE_TYPES",
-    "ElasticWorkerPool", "StandbyExecutor", "AgentKernel", "AGENT_IMAGES", "VOTER_LIBRARY",
-    "register_image", "DeciderPolicy", "PolicyState", "RecoveryPlanner",
+    "ElasticWorkerPool", "StandbyExecutor", "AgentKernel", "AGENT_IMAGES",
+    "TrimPolicy", "VOTER_LIBRARY",
+    "register_image", "CheckpointCoordinator", "Recoverable",
+    "DeciderPolicy", "PolicyState", "RecoveryPlanner",
     "committed_unexecuted", "DirSnapshotStore", "MemorySnapshotStore",
     "SnapshotStore", "Supervisor", "RuleVoter", "StatVoter", "Voter",
     "VoteDecision", "STANDARD_RULES",

@@ -42,23 +42,34 @@ class Permissions:
         self.poll = self.read if poll is None else _ts(poll)
 
 
-#: Standard component roles (paper Table 2).
+#: Standard component roles (paper Table 2). Every *component* role may
+#: additionally append ``Checkpoint`` entries — recording its own snapshot
+#: progress on the log is part of the lifecycle protocol (the trim
+#: low-water mark is computed from these entries), while external clients
+#: still cannot forge them.
 ROLES: Dict[str, Permissions] = {
     "external": Permissions(append=[PayloadType.MAIL]),
     "admin": Permissions(append=[PayloadType.MAIL, PayloadType.POLICY]),
     "driver": Permissions(append=[PayloadType.INF_IN, PayloadType.INF_OUT,
-                                  PayloadType.INTENT, PayloadType.POLICY]),
-    "voter": Permissions(append=[PayloadType.VOTE]),
-    "decider": Permissions(append=[PayloadType.COMMIT, PayloadType.ABORT]),
+                                  PayloadType.INTENT, PayloadType.POLICY,
+                                  PayloadType.CHECKPOINT]),
+    "voter": Permissions(append=[PayloadType.VOTE, PayloadType.CHECKPOINT]),
+    "decider": Permissions(append=[PayloadType.COMMIT, PayloadType.ABORT,
+                                   PayloadType.CHECKPOINT]),
     # Executor: append Result + Mail (mail lets an agent's Executing stage
     # message other agents' buses, paper §3); may NOT append votes/commits/
-    # policy. It may read only what it needs to play: commits + policy.
+    # policy. It may read only what it needs to play: commits + policy
+    # (+ checkpoints, for the trimmed-log epoch floor).
     "executor": Permissions(
-        append=[PayloadType.RESULT, PayloadType.MAIL],
+        append=[PayloadType.RESULT, PayloadType.MAIL,
+                PayloadType.CHECKPOINT],
         read=[PayloadType.INTENT, PayloadType.COMMIT, PayloadType.ABORT,
-              PayloadType.POLICY, PayloadType.RESULT]),
-    # Supervisors / recovery agents introspect everything but write only mail.
-    "supervisor": Permissions(append=[PayloadType.MAIL]),
+              PayloadType.POLICY, PayloadType.RESULT,
+              PayloadType.CHECKPOINT]),
+    # Supervisors / recovery agents introspect everything but write only
+    # mail (and their own checkpoint progress).
+    "supervisor": Permissions(append=[PayloadType.MAIL,
+                                      PayloadType.CHECKPOINT]),
 }
 
 
@@ -113,6 +124,13 @@ class BusClient:
 
     def tail(self) -> int:
         return self.bus.tail()
+
+    def trim_base(self) -> int:
+        """First readable position of the underlying bus (reads below it
+        raise ``TrimmedError``). Components anchor their initial scans
+        here instead of 0. Trimming itself is not exposed: it is a
+        control-plane operation of the ``CheckpointCoordinator``."""
+        return self.bus.trim_base()
 
     def poll(self, start: int, filter: Sequence[PayloadType],
              timeout: Optional[float] = None) -> List[Entry]:

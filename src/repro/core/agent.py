@@ -113,25 +113,43 @@ class LogActAgent:
                 return
         raise RuntimeError("run_until_idle: exceeded max_rounds")
 
-    # -- snapshots ------------------------------------------------------------
-    def snapshot(self) -> None:
-        if self.driver is not None:
-            self.snapshots.put(f"{self.agent_id}-driver",
-                               self.driver.cursor, self.driver.to_snapshot())
-        self.snapshots.put(f"{self.agent_id}-decider",
-                           self.decider.cursor, self.decider.to_snapshot())
+    # -- snapshots / lifecycle -----------------------------------------------
+    def snapshot(self) -> Dict[str, int]:
+        """Checkpoint every component: persist its ``to_snapshot()`` under
+        its component id and append the corresponding ``Checkpoint`` entry
+        (auditable checkpoint progress; the CheckpointCoordinator computes
+        the trim low-water mark from these). Returns the checkpointed
+        position per component."""
+        return {c.component_id: c.checkpoint(self.snapshots)
+                for c in self._components()}
+
+    def bootstrap(self) -> Dict[str, int]:
+        """Snapshot-anchored boot: every component restores its latest
+        snapshot (never rewinding a warm component) and anchors its cursor
+        at the snapshot position — or at the bus trim base when it has no
+        snapshot — instead of replaying from 0. Returns the anchored
+        cursor per component."""
+        return {c.component_id: c.bootstrap(self.snapshots)
+                for c in self._components()}
 
     # -- threaded mode ---------------------------------------------------------
     def _spawn(self, play: Callable[[], int]) -> None:
         def loop() -> None:
             while not self._stop.is_set():
                 if play() == 0:
-                    time.sleep(0.002)
+                    # Idle: block on the bus's append wait (condition
+                    # variable on MemoryBus — wakes immediately on append;
+                    # adaptive backoff on durable backends) instead of a
+                    # fixed sleep. The short timeout bounds both shutdown
+                    # latency via _stop and the race where an entry lands
+                    # between play() and the tail() capture.
+                    self.bus.wait(self.bus.tail(), timeout=0.05)
         t = threading.Thread(target=loop, daemon=True)
         t.start()
         self._threads.append(t)
 
     def start(self) -> None:
+        self.bootstrap()
         self._stop.clear()
         for c in self._components():
             self._spawn(c.play_available)

@@ -17,6 +17,44 @@ API (paper Fig. 4, extended for the batched data plane):
 * ``poll(start, filter, timeout)`` — blocking filtered read. The scan
   resumes from the previously observed tail on spurious wakeups (it never
   re-reads or re-filters the already-scanned ``[start, tail)`` suffix).
+* ``trim(min_position)`` / ``compact()`` / ``trim_base()`` — the log
+  lifecycle API (see below).
+
+Log lifecycle (paper §3.2 recovery contract: "load latest snapshot + play
+the log suffix"). The log is not append-only forever; it moves through a
+four-state lifecycle per position range::
+
+    append ──▶ checkpoint ──▶ trim ──▶ compact
+
+1. **append** — entries land at dense positions; positions are immutable.
+2. **checkpoint** — each component periodically persists its replayable
+   state to the snapshot store and appends a ``Checkpoint`` entry
+   ``{component_id, position, snapshot_key}``, making checkpoint progress
+   itself replayable and auditable.
+3. **trim** — a ``CheckpointCoordinator`` (``core.lifecycle``) computes the
+   **low-water mark**: the minimum over every registered component's
+   latest checkpointed position, further capped so that no
+   committed-but-unexecuted intention (``recovery.committed_unexecuted``,
+   the at-most-once WAL set) is ever dropped. ``trim(lwm)`` deletes
+   entries below it: a SQL ``DELETE`` (SqliteBus), list + per-type-index
+   pruning (MemoryBus), whole-segment deletion (KvBus — trim is
+   segment-aligned, so the effective base may be below the requested
+   minimum, never above). Positions are preserved: ``tail()`` and all
+   surviving positions are unchanged by a trim.
+4. **compact** — backend-specific space reclamation that preserves every
+   surviving entry byte-for-byte: ``VACUUM`` for SQLite, adjacent-segment
+   **merge** for KvBus (many one-batch objects become few large objects,
+   bounding the object count of a week-long log; a bounded LRU segment
+   cache keeps reader memory O(cache), not O(log)).
+
+``trim_base()`` reports the first readable position. A ``read``/``poll``
+that starts *below* the base raises the typed ``TrimmedError`` — the
+caller is directed to the snapshot store: restore the latest snapshot and
+resume from its position (``Recoverable.bootstrap`` in
+``core.lifecycle`` is the uniform implementation of that path).
+``trim``/``compact`` are control-plane operations invoked by a single
+coordinator per bus; readers in other processes pick up an externally
+advanced base on their next ``trim_base()`` refresh or reconnect.
 
 Three backends (paper §4.1):
 
@@ -68,6 +106,7 @@ import sqlite3
 import threading
 import time
 import uuid
+from collections import OrderedDict
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .entries import ALL_TYPES, Entry, Payload, PayloadType, _json_default
@@ -83,6 +122,22 @@ def _parse_types(types: TypeFilter) -> Optional[frozenset]:
     if types is None:
         return None
     return frozenset(PayloadType.parse(t) for t in types)
+
+
+class TrimmedError(RuntimeError):
+    """A read started below the trim base: those entries were checkpointed
+    and compacted away. Recover via the snapshot store — load the latest
+    snapshot and resume reading from its position (``trim_base()`` is the
+    first readable position)."""
+
+    def __init__(self, requested: int, base: int) -> None:
+        super().__init__(
+            f"position {requested} is below the trim base {base}: the "
+            f"prefix was checkpointed and trimmed — restore the latest "
+            f"snapshot from the snapshot store and resume from its "
+            f"position instead of replaying from 0")
+        self.requested = requested
+        self.base = base
 
 
 class AgentBus:
@@ -102,6 +157,31 @@ class AgentBus:
     def tail(self) -> int:
         """Position one past the last entry (0 for an empty log)."""
         raise NotImplementedError
+
+    # -- lifecycle ----------------------------------------------------------
+    def trim_base(self) -> int:
+        """First readable position. Reads/polls below it raise
+        ``TrimmedError``; recover through the snapshot store."""
+        return getattr(self, "_trim_base", 0)
+
+    def trim(self, min_position: int) -> int:
+        """Drop entries below ``min_position`` (monotonic, idempotent;
+        clamped to ``[trim_base, tail]``; may round *down* on backends
+        whose storage granularity is coarser than one entry). Returns the
+        new trim base. Positions and ``tail()`` are unaffected."""
+        raise NotImplementedError
+
+    def compact(self) -> int:
+        """Reclaim space below/around surviving entries without changing
+        their positions or contents. Returns a backend-specific count of
+        compaction operations performed (0 = nothing to do)."""
+        return 0
+
+    def wait(self, known_tail: int, timeout: Optional[float] = None) -> bool:
+        """Block until ``tail() > known_tail`` (condition-variable wake on
+        MemoryBus, adaptive backoff on the durable backends). Returns True
+        if the tail advanced, False on timeout."""
+        return self._wait_for_append(known_tail, timeout)
 
     def poll(self, start: int, filter: Sequence[PayloadType] = ALL_TYPES,
              timeout: Optional[float] = None) -> List[Entry]:
@@ -162,10 +242,15 @@ class AgentBus:
 # ---------------------------------------------------------------------------
 
 class MemoryBus(AgentBus):
-    """In-process log with a per-type index for push-down filtered reads."""
+    """In-process log with a per-type index for push-down filtered reads.
+
+    ``trim`` drops the list prefix and prunes the per-type indexes; the
+    remaining entries keep their original positions (``_trim_base`` is the
+    position of ``_entries[0]``)."""
 
     def __init__(self) -> None:
         self._entries: List[Entry] = []
+        self._trim_base = 0  # position of _entries[0]
         #: type -> (positions, entries) parallel sorted lists
         self._by_type: Dict[PayloadType, Tuple[List[int], List[Entry]]] = {}
         self._cond = threading.Condition()
@@ -174,7 +259,7 @@ class MemoryBus(AgentBus):
         if not payloads:
             return []
         with self._cond:
-            base = len(self._entries)
+            base = self._trim_base + len(self._entries)
             now = time.time()
             positions = []
             for i, p in enumerate(payloads):
@@ -191,12 +276,15 @@ class MemoryBus(AgentBus):
              types: TypeFilter = None) -> List[Entry]:
         fs = _parse_types(types)
         with self._cond:
-            n = len(self._entries)
-            lo, hi = max(0, start), n if end is None else min(end, n)
+            if start < self._trim_base:
+                raise TrimmedError(start, self._trim_base)
+            n = self._trim_base + len(self._entries)
+            lo, hi = start, n if end is None else min(end, n)
             if lo >= hi:
                 return []
             if fs is None:
-                return list(self._entries[lo:hi])
+                return list(self._entries[lo - self._trim_base:
+                                          hi - self._trim_base])
             out: List[Entry] = []
             for t in fs:
                 idx = self._by_type.get(t)
@@ -211,12 +299,27 @@ class MemoryBus(AgentBus):
 
     def tail(self) -> int:
         with self._cond:
-            return len(self._entries)
+            return self._trim_base + len(self._entries)
+
+    def trim(self, min_position: int) -> int:
+        with self._cond:
+            tail = self._trim_base + len(self._entries)
+            target = min(max(min_position, self._trim_base), tail)
+            drop = target - self._trim_base
+            if drop > 0:
+                del self._entries[:drop]
+                for positions, ents in self._by_type.values():
+                    i = bisect.bisect_left(positions, target)
+                    del positions[:i]
+                    del ents[:i]
+                self._trim_base = target
+            return self._trim_base
 
     def _wait_for_append(self, known_tail: int, timeout: Optional[float]) -> bool:
         with self._cond:
             return self._cond.wait_for(
-                lambda: len(self._entries) > known_tail, timeout=timeout)
+                lambda: self._trim_base + len(self._entries) > known_tail,
+                timeout=timeout)
 
 
 # ---------------------------------------------------------------------------
@@ -253,7 +356,13 @@ class SqliteBus(AgentBus):
             " type TEXT NOT NULL,"
             " payload TEXT NOT NULL)")
         conn.execute("CREATE INDEX IF NOT EXISTS idx_type ON log(type)")
+        # Lifecycle metadata (trim base) must survive reboots — an empty
+        # table after a full trim is NOT position 0.
+        conn.execute("CREATE TABLE IF NOT EXISTS meta ("
+                     " key TEXT PRIMARY KEY, value TEXT NOT NULL)")
         conn.commit()
+        self._trim_base = 0
+        self.trim_base()  # load the durable base
 
     def _conn(self) -> sqlite3.Connection:
         conn = getattr(self._local, "conn", None)
@@ -279,7 +388,8 @@ class SqliteBus(AgentBus):
                     row = conn.execute(
                         "SELECT COALESCE(MAX(position)+1, 0) FROM log"
                     ).fetchone()
-                    self._cached_tail = int(row[0])
+                    # a fully trimmed (empty) log resumes at the base
+                    self._cached_tail = max(int(row[0]), self.trim_base())
                 base = self._cached_tail
                 rows = [(base + i, ts, p.type.value, p.to_json())
                         for i, p in enumerate(payloads)]
@@ -309,6 +419,8 @@ class SqliteBus(AgentBus):
 
     def read(self, start: int, end: Optional[int] = None,
              types: TypeFilter = None) -> List[Entry]:
+        if start < self._trim_base:
+            raise TrimmedError(start, self._trim_base)
         conn = self._conn()
         fs = _parse_types(types)
         sql = ("SELECT position, realtime_ts, payload FROM log "
@@ -327,7 +439,45 @@ class SqliteBus(AgentBus):
     def tail(self) -> int:
         row = self._conn().execute(
             "SELECT COALESCE(MAX(position)+1, 0) FROM log").fetchone()
-        return int(row[0])
+        return max(int(row[0]), self._trim_base)
+
+    def trim_base(self) -> int:
+        """Durable trim base (refreshed from the meta table, so an
+        externally advanced base is picked up by bootstrap-time callers;
+        the hot read path checks the cached value)."""
+        row = self._conn().execute(
+            "SELECT value FROM meta WHERE key='trim_base'").fetchone()
+        if row is not None:
+            self._trim_base = max(self._trim_base, int(row[0]))
+        return self._trim_base
+
+    def trim(self, min_position: int) -> int:
+        conn = self._conn()
+        with self._append_lock:
+            target = min(max(min_position, self.trim_base()), self.tail())
+            if target > self._trim_base:
+                with conn:  # DELETE + base update in one transaction
+                    conn.execute("DELETE FROM log WHERE position < ?",
+                                 (target,))
+                    conn.execute(
+                        "INSERT OR REPLACE INTO meta(key, value) "
+                        "VALUES ('trim_base', ?)", (str(target),))
+                self._trim_base = target
+                with self._cache_lock:
+                    for p in [p for p in self._decode_cache if p < target]:
+                        del self._decode_cache[p]
+            return self._trim_base
+
+    def compact(self) -> int:
+        """Reclaim the file space of trimmed rows (VACUUM rewrites the
+        database; safe in WAL mode, outside any transaction)."""
+        conn = self._conn()
+        conn.commit()
+        try:
+            conn.execute("VACUUM")
+        except sqlite3.OperationalError:  # pragma: no cover - busy db
+            return 0
+        return 1
 
     def _wait_for_append(self, known_tail: int, timeout: Optional[float]) -> bool:
         return self._backoff_wait(known_tail, timeout)
@@ -363,10 +513,24 @@ class KvBus(AgentBus):
     batch appended, one GET per segment fetched. LIST and segment-cache
     hits are free (a local manifest hint). ``rtt_ops`` counts charged
     round-trips so benchmarks can audit the model.
+
+    Lifecycle: ``trim`` deletes whole segment objects strictly below the
+    requested position (segment-aligned — the effective base is the end of
+    the last fully dropped segment) and persists the base in a tiny
+    ``trim-base.json`` marker object (a manifest metadata write, charged
+    like LIST: free). ``compact`` merges runs of adjacent segments into
+    single objects of up to ``max_segment_entries`` entries (one PUT per
+    merged object, published with an atomic replace), so a week-long log
+    of one-batch objects collapses to a bounded object count. The decoded
+    segment cache is a **bounded LRU** (``cache_segments`` segments);
+    evicted segments are simply re-fetched (one charged GET) on the next
+    read, keeping reader memory O(cache) on million-entry logs.
     """
 
+    _MARKER = "trim-base.json"
+
     def __init__(self, root: str, latency_s: float = 0.0,
-                 fsync: bool = False) -> None:
+                 fsync: bool = False, cache_segments: int = 256) -> None:
         self._root = root
         self._latency = latency_s
         self._fsync = fsync
@@ -374,12 +538,45 @@ class KvBus(AgentBus):
         self._lock = threading.RLock()
         self._segments: Dict[int, int] = {}      # start -> n entries
         self._starts: List[int] = []             # sorted segment starts
-        self._seg_cache: Dict[int, List[Entry]] = {}  # start -> decoded
-        self._tail = 0
+        #: bounded LRU of decoded segments (start -> entries)
+        self._seg_cache: "OrderedDict[int, List[Entry]]" = OrderedDict()
+        self._cache_max = max(1, cache_segments)
+        self._trim_base = 0
+        self._load_marker()
+        self._tail = self._trim_base
         self.rtt_ops = 0  # charged GET/PUT round-trips
 
     def _seg_key(self, start: int) -> str:
         return os.path.join(self._root, f"seg-{start:012d}.json")
+
+    # -- trim-base marker (manifest metadata; free, like LIST) --------------
+    def _load_marker(self) -> None:
+        try:
+            with open(os.path.join(self._root, self._MARKER)) as f:
+                self._trim_base = max(self._trim_base,
+                                      int(json.load(f)["base"]))
+        except (FileNotFoundError, ValueError, KeyError):
+            pass
+
+    def _write_marker(self) -> None:
+        path = os.path.join(self._root, self._MARKER)
+        tmp = os.path.join(self._root, f".tmp-{uuid.uuid4().hex}")
+        with open(tmp, "w") as f:
+            json.dump({"base": self._trim_base}, f)
+        os.replace(tmp, path)
+
+    # -- bounded LRU segment cache ------------------------------------------
+    def _cache_get(self, start: int) -> Optional[List[Entry]]:
+        entries = self._seg_cache.get(start)
+        if entries is not None:
+            self._seg_cache.move_to_end(start)
+        return entries
+
+    def _cache_put(self, start: int, entries: List[Entry]) -> None:
+        self._seg_cache[start] = entries
+        self._seg_cache.move_to_end(start)
+        while len(self._seg_cache) > self._cache_max:
+            self._seg_cache.popitem(last=False)
 
     def _pay(self, ops: int) -> None:
         """Sleep the injected latency for ``ops`` charged round-trips.
@@ -400,30 +597,44 @@ class KvBus(AgentBus):
         return [Entry.from_dict(r) for r in json.loads(data.decode())]
 
     def _refresh(self) -> int:
-        """LIST the store and pull any segments we haven't seen (free LIST;
-        one charged GET per new segment, which primes the read cache).
-        Returns the number of GETs charged."""
+        """LIST the store and reconcile the segment index: pull segments we
+        haven't seen (free LIST; one charged GET per new segment, which
+        primes the read cache) and drop segments another instance trimmed
+        or compacted away. Returns the number of GETs charged."""
         ops = 0
         try:
             names = os.listdir(self._root)
         except FileNotFoundError:  # pragma: no cover - root removed
             return ops
-        new = sorted(
+        present = {
             int(n[4:16]) for n in names
-            if n.startswith("seg-") and n.endswith(".json"))
-        for s in new:
-            if s in self._segments:
-                continue
+            if n.startswith("seg-") and n.endswith(".json")}
+        gone = [s for s in self._segments if s not in present]
+        if gone:
+            # Another instance trimmed or compacted. Merge compaction
+            # rewrites surviving starts in place, so every cached count
+            # is suspect: rebuild the index from scratch (rare — only the
+            # non-coordinating instance ever takes this path).
+            self._segments.clear()
+            self._seg_cache.clear()
+            self._load_marker()
+        changed = bool(gone)
+        for s in sorted(present - self._segments.keys()):
             entries = self._fetch_segment(s)
             ops += 1
             if entries is None:  # pragma: no cover - raced deletion
                 continue
             self._segments[s] = len(entries)
-            self._seg_cache[s] = entries
-        if len(self._segments) != len(self._starts):
+            self._cache_put(s, entries)
+            changed = True
+        if changed:
             self._starts = sorted(self._segments)
-            last = self._starts[-1]
-            self._tail = last + self._segments[last]
+            if self._starts:
+                last = self._starts[-1]
+                self._tail = max(self._trim_base,
+                                 last + self._segments[last])
+            else:
+                self._tail = self._trim_base
         return ops
 
     def append_many(self, payloads: Sequence[Payload]) -> List[int]:
@@ -458,7 +669,7 @@ class KvBus(AgentBus):
                     continue
                 os.unlink(tmp)
                 self._segments[start] = len(entries)
-                self._seg_cache[start] = entries
+                self._cache_put(start, entries)
                 self._starts.append(start)
                 self._tail = start + len(entries)
                 positions = [e.position for e in entries]
@@ -469,11 +680,18 @@ class KvBus(AgentBus):
     def read(self, start: int, end: Optional[int] = None,
              types: TypeFilter = None) -> List[Entry]:
         fs = _parse_types(types)
-        start = max(0, start)
         ops = 0
         with self._lock:
+            if start < self._trim_base:
+                raise TrimmedError(start, self._trim_base)
             if end is None or end > self._tail:
                 ops += self._refresh()
+                # _refresh may have learned of an externally advanced base
+                # (segments trimmed by another instance): re-check, or the
+                # caller would silently get partial data instead of being
+                # directed to the snapshot store.
+                if start < self._trim_base:
+                    raise TrimmedError(start, self._trim_base)
             out: List[Entry] = []
             i = bisect.bisect_right(self._starts, start) - 1
             if i < 0:
@@ -481,11 +699,11 @@ class KvBus(AgentBus):
             for s in self._starts[i:]:
                 if end is not None and s >= end:
                     break
-                entries = self._seg_cache.get(s)
-                if entries is None:  # pragma: no cover - evicted
+                entries = self._cache_get(s)
+                if entries is None:  # evicted from the bounded LRU
                     entries = self._fetch_segment(s) or []
                     ops += 1
-                    self._seg_cache[s] = entries
+                    self._cache_put(s, entries)
                 for e in entries:
                     if e.position < start:
                         continue
@@ -502,6 +720,99 @@ class KvBus(AgentBus):
             t = self._tail
         self._pay(ops)
         return t
+
+    def trim_base(self) -> int:
+        with self._lock:
+            self._load_marker()
+            return self._trim_base
+
+    def trim(self, min_position: int) -> int:
+        """Segment-aligned trim: deletes every segment that lies entirely
+        below ``min_position``; the new base is the end of the last dropped
+        segment (never above ``min_position``)."""
+        ops = 0
+        with self._lock:
+            ops += self._refresh()
+            target = min(min_position, self._tail)
+            base = self._trim_base
+            for s in list(self._starts):
+                n = self._segments[s]
+                if s + n > target:
+                    break  # starts are sorted; later segments survive too
+                try:
+                    os.unlink(self._seg_key(s))
+                except FileNotFoundError:  # pragma: no cover - raced
+                    pass
+                del self._segments[s]
+                self._seg_cache.pop(s, None)
+                base = max(base, s + n)
+            if base != self._trim_base:
+                self._trim_base = base
+                self._starts = sorted(self._segments)
+                self._write_marker()
+            new_base = self._trim_base
+        self._pay(ops)
+        return new_base
+
+    def compact(self, max_segment_entries: int = 256) -> int:
+        """Merge runs of adjacent segments into single objects of up to
+        ``max_segment_entries`` entries. Entries keep their positions,
+        timestamps, and order byte-for-byte; each merged object costs one
+        PUT (plus GETs for segments not in cache). Returns the number of
+        merged objects written."""
+        merged = 0
+        ops = 0
+        with self._lock:
+            ops += self._refresh()
+            i = 0
+            while i < len(self._starts):
+                group = [self._starts[i]]
+                total = self._segments[group[0]]
+                j = i + 1
+                while (j < len(self._starts)
+                       and total + self._segments[self._starts[j]]
+                       <= max_segment_entries):
+                    group.append(self._starts[j])
+                    total += self._segments[self._starts[j]]
+                    j += 1
+                if len(group) > 1:
+                    entries: List[Entry] = []
+                    for s in group:
+                        es = self._cache_get(s)
+                        if es is None:
+                            es = self._fetch_segment(s) or []
+                            ops += 1
+                        entries.extend(es)
+                    blob = json.dumps([e.to_dict() for e in entries],
+                                      sort_keys=True,
+                                      default=_json_default).encode()
+                    tmp = os.path.join(self._root,
+                                       f".tmp-{uuid.uuid4().hex}")
+                    with open(tmp, "wb") as f:
+                        f.write(blob)
+                        if self._fsync:
+                            os.fsync(f.fileno())
+                    # atomic replace: readers see either the old first
+                    # segment or the full merged one, never a partial
+                    os.replace(tmp, self._seg_key(group[0]))
+                    self.rtt_ops += 1  # one PUT per merged object
+                    ops += 1
+                    for s in group[1:]:
+                        try:
+                            os.unlink(self._seg_key(s))
+                        except FileNotFoundError:  # pragma: no cover
+                            pass
+                        del self._segments[s]
+                        self._seg_cache.pop(s, None)
+                    self._segments[group[0]] = len(entries)
+                    self._cache_put(group[0], entries)
+                    self._starts = sorted(self._segments)
+                    merged += 1
+                    i = self._starts.index(group[0]) + 1
+                else:
+                    i += 1
+        self._pay(ops)
+        return merged
 
     def _wait_for_append(self, known_tail: int, timeout: Optional[float]) -> bool:
         return self._backoff_wait(known_tail, timeout)

@@ -22,10 +22,11 @@ from typing import Any, Dict, Optional, Set
 from . import entries as E
 from .acl import BusClient
 from .entries import Entry, PayloadType
+from .lifecycle import Recoverable
 from .policy import PolicyState
 
 
-class Decider:
+class Decider(Recoverable):
     def __init__(self, client: BusClient, decider_id: Optional[str] = None):
         self.client = client
         self.decider_id = decider_id or f"decider-{E.new_id()}"
@@ -61,14 +62,42 @@ class Decider:
         self.intent_policy = dict(snap["intent_policy"])
         self.decided = set(snap["decided"])
 
+    def bootstrap(self, snapshots) -> int:
+        """Snapshot-anchored boot, plus a decision prime: scan the suffix
+        for Commit/Abort entries *before* replaying it, so intents whose
+        decision already sits later in the suffix are never re-decided
+        (the Intent always precedes its Commit in log order — without the
+        prime, a replaying Decider would re-commit redundantly)."""
+        pos = super().bootstrap(snapshots)
+        for e in self.client.read(pos, types=(PayloadType.COMMIT,
+                                              PayloadType.ABORT)):
+            iid = e.body["intent_id"]
+            self.decided.add(iid)
+            self.pending.pop(iid, None)
+            self.intent_policy.pop(iid, None)
+        return pos
+
     # -- transitions ---------------------------------------------------------
     def handle(self, entry: Entry) -> None:
         if entry.type == PayloadType.POLICY:
             self.policy.apply(entry)
+        elif entry.type == PayloadType.CHECKPOINT:
+            self.policy.note_epoch(entry.body.get("driver_epoch"),
+                                   entry.body.get("elected_driver"))
         elif entry.type == PayloadType.INTENT:
             self._on_intent(entry)
         elif entry.type == PayloadType.VOTE:
             self._on_vote(entry)
+        elif entry.type in (PayloadType.COMMIT, PayloadType.ABORT):
+            # A decision already on the log (our own past appends during a
+            # suffix replay, or a redundant peer Decider's) settles the
+            # intent: never re-decide it. This is what makes a
+            # snapshot-anchored Decider's replay of [snapshot, tail)
+            # silent — identical state, no duplicate Commit entries.
+            iid = entry.body["intent_id"]
+            self.decided.add(iid)
+            self.pending.pop(iid, None)
+            self.intent_policy.pop(iid, None)
 
     def _on_intent(self, entry: Entry) -> None:
         body = entry.body
@@ -139,9 +168,13 @@ class Decider:
         self.client.append(E.abort(iid, self.decider_id, reason))
 
     #: the only entry types ``handle`` reacts to.
-    PLAY_TYPES = (PayloadType.POLICY, PayloadType.INTENT, PayloadType.VOTE)
+    PLAY_TYPES = (PayloadType.POLICY, PayloadType.INTENT, PayloadType.VOTE,
+                  PayloadType.COMMIT, PayloadType.ABORT,
+                  PayloadType.CHECKPOINT)
 
     def play_available(self) -> int:
+        if self.cursor == 0:  # fresh boot: anchor at the trim base
+            self.cursor = self.client.trim_base()
         tail = self.client.tail()
         played = self.client.read(self.cursor, tail, types=self.PLAY_TYPES)
         for e in played:

@@ -21,6 +21,7 @@ from typing import Any, Dict, List, Optional
 from . import entries as E
 from .acl import BusClient
 from .entries import Entry, PayloadType
+from .lifecycle import Recoverable
 from .policy import PolicyState
 
 
@@ -49,7 +50,7 @@ class ScriptPlanner(Planner):
         return p
 
 
-class Driver:
+class Driver(Recoverable):
     def __init__(self, client: BusClient, planner: Planner,
                  driver_id: Optional[str] = None, elect: bool = True):
         self.client = client
@@ -76,9 +77,18 @@ class Driver:
         if self._elected or not self._elect_requested:
             return
         # Learn every election already on the log before picking an epoch,
-        # so a booting driver always out-epochs the incumbent (§3.2).
-        for e in self.client.read(0, types=(PayloadType.POLICY,)):
-            self.policy.apply(e)
+        # so a booting driver always out-epochs the incumbent (§3.2). The
+        # scan is anchored at the trim base; on a trimmed log the election
+        # Policy entry itself may be gone, but the surviving Checkpoint
+        # entries carry the epoch floor forward (see core.lifecycle).
+        for e in self.client.read(self.client.trim_base(),
+                                  types=(PayloadType.POLICY,
+                                         PayloadType.CHECKPOINT)):
+            if e.type == PayloadType.POLICY:
+                self.policy.apply(e)
+            else:
+                self.policy.note_epoch(e.body.get("driver_epoch"),
+                                       e.body.get("elected_driver"))
         epoch = self.policy.driver_epoch + 1
         self.client.append(E.driver_election(self.driver_id, epoch))
         self.policy.driver_epoch = epoch
@@ -87,10 +97,18 @@ class Driver:
 
     # -- snapshot (classical RSM; conversation history is the state) --------
     def to_snapshot(self) -> Dict[str, Any]:
+        # Includes the policy view and the harvested replay lists: on a
+        # trimmed log the suffix replay [cursor, tail) cannot re-derive
+        # them from the (gone) prefix, so the snapshot must carry them.
         return {"cursor": self.cursor, "history": self.history,
                 "n_inferences": self.n_inferences, "n_intents": self.n_intents,
                 "inflight_intent": self.inflight_intent,
-                "mail_buffer": self.mail_buffer, "done": self.done}
+                "mail_buffer": self.mail_buffer, "done": self.done,
+                "policy": self.policy.to_body(), "fenced": self.fenced,
+                "elected": self._elected,
+                "infout_scan": self._infout_scan,
+                "logged_infouts": self._logged_infouts,
+                "logged_intents": self._logged_intents}
 
     def restore_snapshot(self, snap: Dict[str, Any]) -> None:
         self.cursor = snap["cursor"]
@@ -100,6 +118,15 @@ class Driver:
         self.inflight_intent = snap["inflight_intent"]
         self.mail_buffer = list(snap["mail_buffer"])
         self.done = snap["done"]
+        if "policy" in snap:
+            self.policy = PolicyState.from_body(snap["policy"])
+        self.fenced = snap.get("fenced", self.fenced)
+        self._elected = snap.get("elected", self._elected)
+        self._infout_scan = snap.get("infout_scan", self._infout_scan)
+        self._logged_infouts = list(snap.get("logged_infouts",
+                                             self._logged_infouts))
+        self._logged_intents = list(snap.get("logged_intents",
+                                             self._logged_intents))
 
     # -- transitions ---------------------------------------------------------
     def handle(self, entry: Entry) -> None:
@@ -118,6 +145,16 @@ class Driver:
                     and self.policy.elected_driver != self.driver_id
                     and self._elected):
                 self.fenced = True  # lost the election: power down (§3.2)
+            return
+        if t == PayloadType.CHECKPOINT:
+            # Checkpoints carry the checkpointer's fencing view; fold it
+            # exactly like an election entry (no-op unless it out-epochs).
+            self.policy.note_epoch(entry.body.get("driver_epoch"),
+                                   entry.body.get("elected_driver"))
+            if (self.policy.elected_driver is not None
+                    and self.policy.elected_driver != self.driver_id
+                    and self._elected):
+                self.fenced = True
             return
         if t == PayloadType.MAIL:
             # Buffer only; play_available() triggers inference once the
@@ -165,6 +202,8 @@ class Driver:
         # exists. The planner is only invoked — and InfIn/InfOut/Intent only
         # appended — for genuinely new inferences, so replaying a recovered
         # Driver is a pure read of the log.
+        if self._infout_scan == 0:
+            self._infout_scan = self.client.trim_base()
         for e in self.client.read(self._infout_scan,
                                   types=(PayloadType.INF_OUT,
                                          PayloadType.INTENT)):
@@ -207,6 +246,11 @@ class Driver:
                            or f"{self.driver_id}-i{self.n_intents}")
             body = pay.body
             pending.append(pay)
+            # Record in the replay list at issue time: the harvest cursor
+            # skips our own appends (_infout_scan = tail right after), so
+            # without this a snapshot would carry an empty intent list and
+            # a suffix-harvested list would mis-index against n_intents.
+            self._logged_intents.append(body)
         if pending:
             # One batch (one transaction / segment): the InfOut and its
             # Intent land atomically and in order, halving the per-commit
@@ -220,9 +264,11 @@ class Driver:
     #: the only entry types ``handle`` reacts to; everything else on the log
     #: (InfIn/InfOut/Intent/Vote/Commit) is skipped at the backend.
     PLAY_TYPES = (PayloadType.MAIL, PayloadType.RESULT, PayloadType.ABORT,
-                  PayloadType.POLICY)
+                  PayloadType.POLICY, PayloadType.CHECKPOINT)
 
     def play_available(self) -> int:
+        if self.cursor == 0:  # fresh boot: anchor at the trim base
+            self.cursor = self.client.trim_base()
         tail = self.client.tail()
         played = self.client.read(self.cursor, tail, types=self.PLAY_TYPES)
         for e in played:

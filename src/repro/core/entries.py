@@ -6,6 +6,14 @@ Payload types mirror the paper exactly::
 
     InfIn, InfOut, Intent, Vote, Commit, Abort, Result, Mail, Policy
 
+plus one lifecycle extension::
+
+    Checkpoint  — appended by a component after persisting a snapshot of
+                  its replayable state; records ``{component_id, position,
+                  snapshot_key}`` so checkpoint progress is itself part of
+                  the replayable, auditable log. The trim low-water mark is
+                  computed from these entries (see ``core.lifecycle``).
+
 Payloads are plain dicts under a typed envelope so that every backend
 (in-memory, SQLite, file/KV) serializes them identically (JSON).
 """
@@ -29,6 +37,7 @@ class PayloadType(str, enum.Enum):
     RESULT = "Result"
     MAIL = "Mail"
     POLICY = "Policy"
+    CHECKPOINT = "Checkpoint"
 
     @classmethod
     def parse(cls, v: "PayloadType | str") -> "PayloadType":
@@ -162,6 +171,29 @@ def policy(scope: str, body: Dict[str, Any], issuer: str = "admin") -> Payload:
     """scope: 'decider' | 'voter:<type>' | 'driver' | 'executor'."""
     return Payload(PayloadType.POLICY, {"scope": scope, "policy": body,
                                         "issuer": issuer})
+
+
+def checkpoint(component_id: str, position: int, snapshot_key: str,
+               driver_epoch: Optional[int] = None,
+               elected_driver: Optional[str] = None, **extra) -> Payload:
+    """Checkpoint record: ``component_id`` snapshotted its state as of log
+    ``position`` under ``snapshot_key`` in the snapshot store.
+
+    The optional ``driver_epoch``/``elected_driver`` carry the
+    checkpointer's fencing view forward: since the latest checkpoint
+    entries always survive a trim (they sit above the low-water mark they
+    define), a component booting on a trimmed log can recover the current
+    election epoch from them even after the original election ``Policy``
+    entry has been compacted away.
+    """
+    body: Dict[str, Any] = {"component_id": component_id,
+                            "position": int(position),
+                            "snapshot_key": snapshot_key, **extra}
+    if driver_epoch is not None and int(driver_epoch) >= 0:
+        body["driver_epoch"] = int(driver_epoch)
+        if elected_driver is not None:
+            body["elected_driver"] = elected_driver
+    return Payload(PayloadType.CHECKPOINT, body)
 
 
 def driver_election(driver_id: str, epoch: int) -> Payload:

@@ -24,13 +24,14 @@ from typing import Any, Callable, Dict, Optional, Set
 from . import entries as E
 from .acl import BusClient
 from .entries import Entry, PayloadType
+from .lifecycle import Recoverable
 from .policy import PolicyState
 
 Handler = Callable[[Dict[str, Any], Any], Dict[str, Any]]
 # handler(args, env) -> result-value dict
 
 
-class Executor:
+class Executor(Recoverable):
     def __init__(self, client: BusClient, env: Any,
                  handlers: Optional[Dict[str, Handler]] = None,
                  executor_id: Optional[str] = None,
@@ -53,9 +54,13 @@ class Executor:
 
         Before announcing, the executor conservatively scans the existing
         log so it knows which intents already have Results (at-most-once).
+        The scan is anchored at the trim base: the CheckpointCoordinator
+        guarantees every committed-but-unexecuted intention survives a
+        trim, so nothing below the base can still need execution.
         """
-        for e in self.client.read(0, types=(PayloadType.INTENT,
-                                            PayloadType.RESULT)):
+        for e in self.client.read(self.client.trim_base(),
+                                  types=(PayloadType.INTENT,
+                                         PayloadType.RESULT)):
             if e.type == PayloadType.INTENT:
                 self.intents[e.body["intent_id"]] = e.body
             elif not e.body.get("recovered"):
@@ -69,11 +74,37 @@ class Executor:
     def register(self, kind: str, handler: Handler) -> None:
         self.handlers[kind] = handler
 
+    # -- snapshot (replayable bookkeeping only; effects live in the env) ----
+    def to_snapshot(self) -> Dict[str, Any]:
+        return {"cursor": self.cursor, "policy": self.policy.to_body(),
+                "intents": self.intents, "executed": sorted(self.executed)}
+
+    def restore_snapshot(self, snap: Dict[str, Any]) -> None:
+        self.cursor = snap["cursor"]
+        self.policy = PolicyState.from_body(snap["policy"])
+        self.intents = {k: dict(v) for k, v in snap["intents"].items()}
+        self.executed = set(snap["executed"])
+
+    def bootstrap(self, snapshots) -> int:
+        """Snapshot-anchored boot, plus the at-most-once prime: scan the
+        suffix for Results *before* replaying it (the Commit precedes its
+        Result in log order — without the prime, replaying a suffix whose
+        work already completed would re-execute it)."""
+        pos = super().bootstrap(snapshots)
+        for e in self.client.read(pos, types=(PayloadType.RESULT,)):
+            if not e.body.get("recovered"):
+                self.executed.add(e.body["intent_id"])
+        return pos
+
     # -- transitions ---------------------------------------------------------
     def handle(self, entry: Entry) -> None:
         t = entry.type
         if t == PayloadType.POLICY:
             self.policy.apply(entry)
+            return
+        if t == PayloadType.CHECKPOINT:
+            self.policy.note_epoch(entry.body.get("driver_epoch"),
+                                   entry.body.get("elected_driver"))
             return
         if t == PayloadType.INTENT:
             if self.policy.driver_is_current(entry.body.get("driver_id")):
@@ -117,9 +148,12 @@ class Executor:
     #: the only entry types ``handle`` reacts to (all within the executor
     #: role's read permissions).
     PLAY_TYPES = (PayloadType.POLICY, PayloadType.INTENT,
-                  PayloadType.RESULT, PayloadType.COMMIT)
+                  PayloadType.RESULT, PayloadType.COMMIT,
+                  PayloadType.CHECKPOINT)
 
     def play_available(self) -> int:
+        if self.cursor == 0:  # fresh boot: anchor at the trim base
+            self.cursor = self.client.trim_base()
         tail = self.client.tail()
         played = self.client.read(self.cursor, tail, types=self.PLAY_TYPES)
         for e in played:

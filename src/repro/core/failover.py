@@ -26,6 +26,7 @@ from .acl import BusClient
 from .bus import AgentBus
 from .executor import Executor, Handler
 from .introspect import BusObserver, health_check
+from .snapshot import SnapshotStore
 
 
 class StandbyExecutor:
@@ -46,6 +47,21 @@ class StandbyExecutor:
         self.takeover_reason: Optional[str] = None
         # Incremental watch: each check() folds only the new log suffix.
         self._observer = BusObserver(bus)
+
+    # -- lifecycle -----------------------------------------------------------
+    def bootstrap(self, snapshots: Optional[SnapshotStore]) -> int:
+        """Snapshot-anchored boot of the watch observer (required when the
+        primary's bus has been trimmed — the observer cannot start at 0)."""
+        return self._observer.bootstrap(snapshots,
+                                        f"{self.standby_id}-watch")
+
+    def checkpoint(self, snapshots: SnapshotStore) -> int:
+        """Persist the watch state and announce it (supervisor-role
+        credential) so the bus coordinator accounts for this standby."""
+        client = BusClient(self.bus, f"{self.standby_id}-watch",
+                           "supervisor")
+        return self._observer.checkpoint(
+            snapshots, f"{self.standby_id}-watch", client=client)
 
     # -- detection -----------------------------------------------------------
     def check(self) -> Optional[str]:

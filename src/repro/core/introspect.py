@@ -17,11 +17,12 @@ one-shot observer.
 from __future__ import annotations
 
 import statistics
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from .bus import AgentBus
 from .entries import Entry, PayloadType
+from .snapshot import SnapshotStore
 
 #: the entry types that participate in intent lifecycles — the natural
 #: push-down filter for trace-only scans (recovery, failover detection).
@@ -48,6 +49,13 @@ class IntentTrace:
         if self.result is None:
             return float("nan")
         return self.result_ts - self.intent_ts
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "IntentTrace":
+        return cls(**d)
 
 
 def _fold_trace(traces: Dict[str, IntentTrace], order: List[str],
@@ -107,8 +115,65 @@ class BusObserver:
         self._by_type: Dict[str, int] = {}
         self._bytes_by_type: Dict[str, int] = {}
 
+    # -- snapshot / bootstrap (the observer is itself replayable state) -----
+    def to_snapshot(self) -> Dict[str, Any]:
+        return {"cursor": self.cursor,
+                "by_type": dict(self._by_type),
+                "bytes_by_type": dict(self._bytes_by_type),
+                "traces": [self._traces[i].to_dict() for i in self._order]}
+
+    def restore_snapshot(self, snap: Dict[str, Any]) -> None:
+        self.cursor = snap["cursor"]
+        self._by_type = dict(snap["by_type"])
+        self._bytes_by_type = dict(snap["bytes_by_type"])
+        self._traces = {}
+        self._order = []
+        for d in snap["traces"]:
+            t = IntentTrace.from_dict(d)
+            self._traces[t.intent_id] = t
+            self._order.append(t.intent_id)
+
+    def bootstrap(self, snapshots: Optional[SnapshotStore],
+                  component_id: str) -> int:
+        """Snapshot-anchored boot: restore the latest observer snapshot and
+        resume folding at its position instead of 0 (mandatory on a
+        trimmed bus — a cursor below the trim base cannot be replayed).
+        Mirrors ``Recoverable.bootstrap``: with no snapshot the cursor
+        anchors at the trim base, but a snapshot *older* than the base
+        raises ``TrimmedError`` — silently skipping the unfolded gap
+        would corrupt every derived trace/health statistic."""
+        from .bus import TrimmedError
+        latest = snapshots.latest(component_id) if snapshots else None
+        base = self.bus.trim_base()
+        if latest is None:
+            self.cursor = max(self.cursor, base)
+        else:
+            pos, state = latest
+            if pos > self.cursor:
+                self.restore_snapshot(state)
+                self.cursor = max(self.cursor, pos)
+            if self.cursor < base:
+                raise TrimmedError(self.cursor, base)
+        return self.cursor
+
+    def checkpoint(self, snapshots: SnapshotStore, component_id: str,
+                   client: Optional[Any] = None) -> int:
+        """Persist the folded state; optionally announce it on the bus
+        (``client`` must hold Checkpoint append rights, e.g. the
+        supervisor role) so the coordinator can account for this
+        observer when computing the low-water mark."""
+        pos = self.cursor
+        snapshots.put(component_id, pos, self.to_snapshot())
+        if client is not None:
+            from . import entries as E
+            client.append(E.checkpoint(component_id, pos,
+                                       f"{component_id}/{pos:012d}"))
+        return pos
+
     def refresh(self) -> int:
         """Fold all newly appended entries; returns how many were new."""
+        if self.cursor == 0:  # fresh boot: anchor at the trim base
+            self.cursor = self.bus.trim_base()
         tail = self.bus.tail()
         new = self.bus.read(self.cursor, tail)
         for e in new:

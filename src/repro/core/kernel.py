@@ -25,6 +25,7 @@ from .bus import AgentBus, make_bus
 from .decider import Decider
 from .driver import Planner
 from .executor import Handler
+from .lifecycle import CheckpointCoordinator
 from .snapshot import DirSnapshotStore, MemorySnapshotStore, SnapshotStore
 from .voter import RuleVoter, StatVoter, Voter, STANDARD_RULES
 
@@ -53,12 +54,42 @@ def register_image(name: str) -> Callable[[Callable[..., LogActAgent]],
 
 
 @dataclass
+class TrimPolicy:
+    """Per-bus log-lifecycle policy (checkpoint cadence + trim/compact).
+
+    Every ``checkpoint_every`` appended entries, ``maintain`` checkpoints
+    all of the bus's components, trims at the coordinator's low-water mark
+    (keeping at least ``retain_entries`` newest entries), compacts the
+    backend, and prunes the snapshot store to ``keep_snapshots`` files per
+    component.
+    """
+
+    checkpoint_every: int = 512
+    retain_entries: int = 0
+    compact: bool = True
+    keep_snapshots: int = 3
+
+
+@dataclass
 class BusHandle:
     name: str
     bus: AgentBus
     agent: Optional[LogActAgent] = None
     voters: List[Voter] = field(default_factory=list)
     decider: Optional[Decider] = None
+    trim_policy: Optional[TrimPolicy] = None
+    coordinator: Optional[CheckpointCoordinator] = None
+    snapshots: Optional[SnapshotStore] = None
+    last_checkpoint_tail: int = 0
+
+    def components(self) -> List[Any]:
+        """Every Recoverable component the kernel runs on this bus."""
+        if self.agent is not None:
+            return self.agent._components()
+        comps: List[Any] = list(self.voters)
+        if self.decider is not None:
+            comps.append(self.decider)
+        return comps
 
 
 class AgentKernel:
@@ -80,6 +111,7 @@ class AgentKernel:
                    image: Optional[str] = None,
                    image_kw: Optional[Dict[str, Any]] = None,
                    threaded: bool = False,
+                   trim_policy: Optional[TrimPolicy] = None,
                    **bus_kw) -> BusHandle:
         backend = backend or self.default_backend
         path = None
@@ -114,9 +146,57 @@ class AgentKernel:
                         BusClient(bus, f"{name}-{vname}", "voter")))
         elif mode != "raw":
             raise ValueError(f"unknown mode {mode!r}")
+        if trim_policy is not None:
+            handle.trim_policy = trim_policy
+            handle.snapshots = (handle.agent.snapshots if handle.agent
+                                else self.snapshot_store())
+            handle.coordinator = CheckpointCoordinator(
+                bus, component_ids=[c.component_id
+                                    for c in handle.components()])
         with self._lock:
             self.buses[name] = handle
         return handle
+
+    # -- log lifecycle (checkpoint + trim + compact), per bus ----------------
+    def maintain(self, name: str, force: bool = False) -> Dict[str, Any]:
+        """One lifecycle round for one bus: if ``checkpoint_every`` entries
+        accumulated since the last round (or ``force``), checkpoint every
+        component, trim at the safe low-water mark, compact, and prune old
+        snapshots. Returns what happened."""
+        h = self.get(name)
+        if h.trim_policy is None or h.coordinator is None:
+            return {"maintained": False}
+        pol = h.trim_policy
+        tail = h.bus.tail()
+        if not force and tail - h.last_checkpoint_tail < pol.checkpoint_every:
+            return {"maintained": False, "tail": tail}
+        # Hot-plugged components (add_voter) join the gate set here.
+        for c in h.components():
+            h.coordinator.register(c.component_id)
+        # Stop-the-world checkpoint for threaded agents: to_snapshot()
+        # must see a quiescent (cursor, state) pair — snapshotting a
+        # component mid-play would tear it (state ahead of the recorded
+        # cursor, or dict-mutation races). The pause is bounded by the
+        # components' 50 ms idle-wait granularity.
+        threaded = h.agent is not None and bool(h.agent._threads)
+        if threaded:
+            h.agent.stop()
+        try:
+            positions = {c.component_id: c.checkpoint(h.snapshots)
+                         for c in h.components()}
+            h.last_checkpoint_tail = h.bus.tail()
+            base = h.coordinator.trim(retain=pol.retain_entries)
+            compacted = h.bus.compact() if pol.compact else 0
+            h.snapshots.prune(keep_last=pol.keep_snapshots)
+        finally:
+            if threaded:
+                h.agent.start()
+        return {"maintained": True, "checkpoints": positions,
+                "trim_base": base, "compacted": compacted, "tail": tail}
+
+    def maintain_all(self, force: bool = False) -> Dict[str, Dict[str, Any]]:
+        return {name: self.maintain(name, force=force)
+                for name in self.list_buses()}
 
     def list_buses(self) -> List[str]:
         with self._lock:

@@ -1,0 +1,192 @@
+"""Log lifecycle: checkpoint protocol, snapshot-anchored bootstrap, and the
+trim low-water mark (paper §3.2: "load latest snapshot + play the log
+suffix", made a first-class log operation).
+
+Two pieces:
+
+* ``Recoverable`` — the uniform snapshot/bootstrap mixin every replayable
+  component (Driver, Decider, Voter, Executor) shares. ``checkpoint``
+  persists ``to_snapshot()`` to the snapshot store *and* appends a
+  ``Checkpoint`` entry to the bus, so checkpoint progress is replayable
+  and auditable; ``bootstrap`` restores the latest snapshot and anchors
+  the component's cursor at the snapshot position instead of 0 — the only
+  correct starting point on a trimmed log.
+
+* ``CheckpointCoordinator`` — the control-plane side: it folds
+  ``Checkpoint`` entries (plus the intent lifecycle) incrementally and
+  computes the **safe low-water mark**::
+
+      lwm = min( latest checkpointed position of every registered
+                 component,
+                 earliest committed-but-unexecuted intent position )
+
+  The second term is the at-most-once WAL guarantee: an intention that
+  was committed but has no ``Result`` yet must stay on the log — a
+  rebooting Executor treats exactly that set as "environment state
+  unknown" (``recovery.committed_unexecuted``), and trimming it would
+  turn a crash into silent work loss. ``trim`` applies the mark to the
+  bus; ``compact`` asks the backend to reclaim space (KvBus segment
+  merge, SQLite VACUUM).
+
+Fencing across trims: ``Checkpoint`` entries carry the checkpointer's
+``driver_epoch``/``elected_driver``. Because the latest checkpoint entry
+of each component always sits *above* the low-water mark it defines, a
+component booting on a trimmed log can always recover the current
+election epoch from surviving checkpoints even after the original
+election ``Policy`` entry was compacted away (components fold these via
+``PolicyState.note_epoch``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Optional, Set
+
+from . import entries as E
+from .bus import AgentBus, TrimmedError
+from .entries import PayloadType
+from .snapshot import SnapshotStore
+
+
+class Recoverable:
+    """Uniform component lifecycle protocol (mixin).
+
+    Requires the component to provide ``client`` (a ``BusClient``),
+    ``cursor`` (its play position), and ``to_snapshot()`` /
+    ``restore_snapshot()``.
+    """
+
+    @property
+    def component_id(self) -> str:
+        """Stable identity in the snapshot store and on Checkpoint
+        entries — the component's bus credential id."""
+        return self.client.client_id  # type: ignore[attr-defined]
+
+    def to_snapshot(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def restore_snapshot(self, snap: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def checkpoint(self, snapshots: SnapshotStore) -> int:
+        """Persist a snapshot of the state as of ``cursor`` and append the
+        corresponding ``Checkpoint`` entry. Returns the checkpointed
+        position."""
+        pos = self.cursor  # type: ignore[attr-defined]
+        snapshots.put(self.component_id, pos, self.to_snapshot())
+        pol = getattr(self, "policy", None)
+        self.client.append(E.checkpoint(  # type: ignore[attr-defined]
+            self.component_id, pos, f"{self.component_id}/{pos:012d}",
+            driver_epoch=getattr(pol, "driver_epoch", None),
+            elected_driver=getattr(pol, "elected_driver", None)))
+        return pos
+
+    def bootstrap(self, snapshots: Optional[SnapshotStore]) -> int:
+        """Snapshot-anchored boot: restore the latest snapshot (if any and
+        if it is ahead of the live cursor — a warm component is never
+        rewound) and anchor the cursor at the snapshot position; without a
+        snapshot, start at the bus's trim base (0 on an untrimmed log).
+        Raises ``TrimmedError`` if the only available snapshot is older
+        than the trim base — the log suffix it needs is gone."""
+        latest = snapshots.latest(self.component_id) if snapshots else None
+        base = self.client.trim_base()  # type: ignore[attr-defined]
+        if latest is None:
+            self.cursor = max(self.cursor, base)  # type: ignore
+        else:
+            pos, state = latest
+            if pos > self.cursor:  # type: ignore[attr-defined]
+                self.restore_snapshot(state)
+                self.cursor = max(self.cursor, pos)  # type: ignore
+            if self.cursor < base:  # type: ignore[attr-defined]
+                raise TrimmedError(self.cursor, base)  # type: ignore
+        return self.cursor  # type: ignore[attr-defined]
+
+
+class CheckpointCoordinator:
+    """Computes the safe trim low-water mark over one bus and applies it.
+
+    The coordinator's scan is incremental (a cursor plus bounded folded
+    state: one latest-position per component, one position per undecided/
+    unexecuted intent), so week-long logs are maintained in O(new
+    entries) per round. One coordinator per bus; trimming from several
+    coordinators concurrently is safe only because ``trim`` is monotonic,
+    but wasteful — the kernel owns one per managed bus.
+    """
+
+    SCAN_TYPES = (PayloadType.CHECKPOINT, PayloadType.INTENT,
+                  PayloadType.COMMIT, PayloadType.ABORT, PayloadType.RESULT)
+
+    def __init__(self, bus: AgentBus,
+                 component_ids: Iterable[str] = ()) -> None:
+        self.bus = bus
+        #: components whose checkpoints gate the mark. Every id listed
+        #: here must have checkpointed at least once before any trim
+        #: happens (a silent straggler would otherwise lose its suffix).
+        self.component_ids: Set[str] = set(component_ids)
+        self._scan = bus.trim_base()
+        self._checkpoints: Dict[str, int] = {}   # component -> latest pos
+        self._open_intents: Dict[str, int] = {}  # iid -> intent position
+        self._committed: Set[str] = set()        # committed, no Result yet
+
+    def register(self, component_id: str) -> None:
+        """Add a component (e.g. a hot-plugged voter) to the gate set."""
+        self.component_ids.add(component_id)
+
+    def refresh(self) -> int:
+        """Fold newly appended lifecycle-relevant entries; returns how
+        many entries were folded."""
+        tail = self.bus.tail()
+        new = self.bus.read(self._scan, tail, types=self.SCAN_TYPES)
+        for e in new:
+            b = e.body
+            if e.type == PayloadType.CHECKPOINT:
+                cid = b["component_id"]
+                self._checkpoints[cid] = max(
+                    self._checkpoints.get(cid, 0), int(b["position"]))
+            elif e.type == PayloadType.INTENT:
+                self._open_intents.setdefault(b["intent_id"], e.position)
+            elif e.type == PayloadType.COMMIT:
+                if b["intent_id"] in self._open_intents:
+                    self._committed.add(b["intent_id"])
+            elif e.type == PayloadType.ABORT:
+                self._open_intents.pop(b["intent_id"], None)
+                self._committed.discard(b["intent_id"])
+            elif e.type == PayloadType.RESULT and not b.get("recovered"):
+                self._open_intents.pop(b["intent_id"], None)
+                self._committed.discard(b["intent_id"])
+        self._scan = max(self._scan, tail)
+        return len(new)
+
+    def low_water_mark(self) -> int:
+        """The highest position safe to trim below. Equals the current
+        trim base (i.e. "no trim") until every registered component has
+        checkpointed."""
+        self.refresh()
+        base = self.bus.trim_base()
+        if not self._checkpoints:
+            return base
+        if self.component_ids - set(self._checkpoints):
+            return base  # a registered component has never checkpointed
+        # Min over EVERY observed checkpointer, registered or not: any
+        # component that announced a checkpoint on this bus (hot-plugged
+        # voters, supervisor/standby observers) is thereby protected —
+        # its cursor is never trimmed out from under it.
+        lwm = min(self._checkpoints.values())
+        # Never trim a committed-but-unexecuted intention (at-most-once).
+        pending = [self._open_intents[i] for i in self._committed
+                   if i in self._open_intents]
+        if pending:
+            lwm = min(lwm, min(pending))
+        return max(base, lwm)
+
+    def trim(self, retain: int = 0) -> int:
+        """Trim the bus at the low-water mark, optionally keeping at least
+        ``retain`` newest entries regardless. Returns the new base."""
+        lwm = self.low_water_mark()
+        if retain > 0:
+            lwm = min(lwm, max(self.bus.trim_base(),
+                               self.bus.tail() - retain))
+        if lwm > self.bus.trim_base():
+            self.bus.trim(lwm)
+        return self.bus.trim_base()
+
+    def compact(self) -> int:
+        return self.bus.compact()

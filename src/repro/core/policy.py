@@ -72,6 +72,40 @@ class PolicyState:
                 self.driver_epoch = epoch
                 self.elected_driver = body.get("elect")
 
+    def note_epoch(self, epoch: Optional[int],
+                   elected: Optional[str] = None) -> None:
+        """Fold a checkpoint-carried fencing view (``driver_epoch`` /
+        ``elected_driver`` from a ``Checkpoint`` entry). Only ever advances
+        the epoch — a replayed election at the same epoch is the election
+        the checkpoint already reflected, so ``apply`` correctly ignores
+        it afterwards."""
+        if epoch is None:
+            return
+        epoch = int(epoch)
+        if epoch > self.driver_epoch:
+            self.driver_epoch = epoch
+            self.elected_driver = elected
+
+    def to_body(self) -> Dict[str, Any]:
+        """JSON-serializable form, for component snapshots."""
+        return {"decider": {"mode": self.decider.mode,
+                            "voter_types": list(self.decider.voter_types),
+                            "k": self.decider.k},
+                "voter": {k: dict(v) for k, v in self.voter.items()},
+                "executor": dict(self.executor),
+                "elected_driver": self.elected_driver,
+                "driver_epoch": self.driver_epoch}
+
+    @classmethod
+    def from_body(cls, body: Dict[str, Any]) -> "PolicyState":
+        st = cls(decider=DeciderPolicy.from_body(body.get("decider", {})),
+                 voter={k: dict(v)
+                        for k, v in body.get("voter", {}).items()},
+                 executor=dict(body.get("executor", {})))
+        st.elected_driver = body.get("elected_driver")
+        st.driver_epoch = int(body.get("driver_epoch", -1))
+        return st
+
     def driver_is_current(self, driver_id: Optional[str]) -> bool:
         """True iff ``driver_id`` is the currently elected (unfenced) driver.
 

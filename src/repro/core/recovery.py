@@ -26,6 +26,7 @@ from .bus import AgentBus
 from .driver import Planner
 from .entries import PayloadType
 from .introspect import TRACE_TYPES, trace_intents
+from .snapshot import SnapshotStore
 
 OptimizerHook = Callable[[Dict[str, Any]], Optional[Dict[str, Any]]]
 # hook(original_intent_body) -> replacement args (or None if no fix applies)
@@ -60,7 +61,9 @@ class RecoveryPlanner(Planner):
 
     def __init__(self, original_bus: AgentBus,
                  optimizer_hooks: Sequence[OptimizerHook] = (
-                     known_pathology_fixes,)):
+                     known_pathology_fixes,),
+                 snapshots: Optional[SnapshotStore] = None,
+                 original_agent_id: str = "agent"):
         self.original = original_bus
         self.hooks = list(optimizer_hooks)
         self.phase = "probe"
@@ -68,8 +71,26 @@ class RecoveryPlanner(Planner):
         self.plan_notes: List[str] = []
         # Introspect only the intentions of the original bus (paper §5.3);
         # the type filter is pushed down so InfIn/InfOut blobs never load.
-        intents = [e.body for e in
-                   self.original.read(0, types=(PayloadType.INTENT,))]
+        # The scan is snapshot-anchored: on a *trimmed* original bus the
+        # oldest intentions live only in the original Driver's snapshot
+        # (its conversation history records every issued intent), so we
+        # harvest those first and then read the surviving log suffix.
+        intents: List[Dict[str, Any]] = []
+        seen = set()
+        if snapshots is not None:
+            latest = snapshots.latest(f"{original_agent_id}-driver")
+            if latest is not None:
+                for h in latest[1].get("history", ()):
+                    if h.get("role") == "intent":
+                        body = dict(h["body"])
+                        if body.get("intent_id") not in seen:
+                            seen.add(body.get("intent_id"))
+                            intents.append(body)
+        for e in self.original.read(self.original.trim_base(),
+                                    types=(PayloadType.INTENT,)):
+            if e.body.get("intent_id") not in seen:
+                seen.add(e.body.get("intent_id"))
+                intents.append(e.body)
         self.original_intents = intents
         self.work_intent = next(
             (b for b in reversed(intents) if "work_range" in b.get("args", {})),
@@ -121,7 +142,10 @@ class RecoveryPlanner(Planner):
 
 def committed_unexecuted(bus: AgentBus) -> List[Dict[str, Any]]:
     """WAL-style scan: committed intentions without a Result — the at-most-
-    once candidates a recovering executor must treat as 'state unknown'."""
+    once candidates a recovering executor must treat as 'state unknown'.
+    Anchored at the trim base: the CheckpointCoordinator never trims a
+    committed-but-unexecuted intention, so the suffix is sufficient."""
     return [t.args | {"intent_id": t.intent_id, "kind": t.kind}
-            for t in trace_intents(bus.read(0, types=TRACE_TYPES))
+            for t in trace_intents(bus.read(bus.trim_base(),
+                                            types=TRACE_TYPES))
             if t.decision == "commit" and t.result is None]

@@ -6,12 +6,22 @@ Two implementations: in-memory (tests) and a directory-backed object store.
 Snapshots are keyed ``<component_id>/<log_position>`` and carry the log
 position they correspond to, so recovery = load latest snapshot + play the
 log suffix from that position.
+
+Lifecycle integration: periodic checkpointing writes one snapshot file per
+component per round, so the store must not grow without bound either —
+``prune(keep_last=N)`` drops all but the newest N snapshots per component
+(the trim low-water mark only ever references the latest, so older files
+are dead weight). ``DirSnapshotStore`` additionally caches the per-
+component position listing between ``put``s (one ``listdir`` per component
+per process instead of one per ``latest()``), and its listing is strict:
+stray temp files (``*.json.tmp`` from an interrupted atomic publish) and
+foreign files are never considered by ``latest()``.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 
 class SnapshotStore:
@@ -22,6 +32,12 @@ class SnapshotStore:
     def latest(self, component_id: str) -> Optional[Tuple[int, Dict[str, Any]]]:
         """Return (position, state) of the newest snapshot, or None."""
         raise NotImplementedError
+
+    def prune(self, keep_last: int = 3,
+              component_id: Optional[str] = None) -> int:
+        """Drop all but the newest ``keep_last`` snapshots (for one
+        component, or every component). Returns how many were removed."""
+        return 0
 
 
 class MemorySnapshotStore(SnapshotStore):
@@ -40,16 +56,42 @@ class MemorySnapshotStore(SnapshotStore):
         pos = max(snaps)
         return pos, snaps[pos]
 
+    def prune(self, keep_last: int = 3,
+              component_id: Optional[str] = None) -> int:
+        removed = 0
+        cids = [component_id] if component_id else list(self._snaps)
+        for cid in cids:
+            snaps = self._snaps.get(cid, {})
+            for pos in sorted(snaps)[:-keep_last or None]:
+                del snaps[pos]
+                removed += 1
+        return removed
+
 
 class DirSnapshotStore(SnapshotStore):
     def __init__(self, root: str) -> None:
         self.root = root
         os.makedirs(root, exist_ok=True)
+        #: component_id -> sorted positions; maintained by put/prune so
+        #: latest() costs no listdir after the first call per component.
+        self._listing: Dict[str, List[int]] = {}
 
     def _dir(self, component_id: str) -> str:
         d = os.path.join(self.root, component_id)
         os.makedirs(d, exist_ok=True)
         return d
+
+    def _positions(self, component_id: str,
+                   refresh: bool = False) -> List[int]:
+        if refresh or component_id not in self._listing:
+            d = self._dir(component_id)
+            # Strict filter: exactly "<12 digits>.json". Interrupted
+            # atomic publishes leave "*.json.tmp"; anything else in the
+            # directory is not a snapshot either.
+            self._listing[component_id] = sorted(
+                int(n[:-5]) for n in os.listdir(d)
+                if n.endswith(".json") and n[:-5].isdigit())
+        return self._listing[component_id]
 
     def put(self, component_id: str, position: int,
             state: Dict[str, Any]) -> None:
@@ -58,12 +100,42 @@ class DirSnapshotStore(SnapshotStore):
         with open(tmp, "w") as f:
             json.dump(state, f)
         os.replace(tmp, path)  # atomic publish
+        positions = self._positions(component_id)
+        if position not in positions:
+            positions.append(position)
+            positions.sort()
 
     def latest(self, component_id: str) -> Optional[Tuple[int, Dict[str, Any]]]:
-        d = self._dir(component_id)
-        names = sorted(n for n in os.listdir(d) if n.endswith(".json"))
-        if not names:
-            return None
-        name = names[-1]
-        with open(os.path.join(d, name)) as f:
-            return int(name[:-5]), json.load(f)
+        positions = self._positions(component_id)
+        while positions:
+            pos = positions[-1]
+            path = os.path.join(self._dir(component_id), f"{pos:012d}.json")
+            try:
+                with open(path) as f:
+                    return pos, json.load(f)
+            except FileNotFoundError:
+                # pruned by another process since we cached the listing
+                self._positions(component_id, refresh=True)
+                positions = self._listing[component_id]
+        return None
+
+    def prune(self, keep_last: int = 3,
+              component_id: Optional[str] = None) -> int:
+        if component_id is None:
+            cids = [n for n in os.listdir(self.root)
+                    if os.path.isdir(os.path.join(self.root, n))]
+        else:
+            cids = [component_id]
+        removed = 0
+        for cid in cids:
+            positions = self._positions(cid, refresh=True)
+            drop, keep = positions[:-keep_last or None], positions[-keep_last or None:]
+            for pos in drop:
+                try:
+                    os.unlink(os.path.join(self._dir(cid),
+                                           f"{pos:012d}.json"))
+                    removed += 1
+                except FileNotFoundError:  # pragma: no cover - raced
+                    pass
+            self._listing[cid] = keep
+        return removed

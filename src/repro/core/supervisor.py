@@ -14,6 +14,7 @@ from .acl import BusClient
 from .bus import AgentBus
 from .entries import PayloadType, mail
 from .introspect import BusObserver, health_check
+from .snapshot import SnapshotStore
 
 
 class Supervisor:
@@ -32,6 +33,25 @@ class Supervisor:
         self.claimed: Dict[Tuple[int, int], str] = {}  # work_range -> worker
         self._claims_sent: Dict[str, Set[Tuple[int, int]]] = {}
         self.mail_sent = 0
+
+    def _observer_id(self, worker: str) -> str:
+        return f"{self.supervisor_id}@{worker}"
+
+    def bootstrap(self, snapshots: Optional[SnapshotStore]) -> Dict[str, int]:
+        """Snapshot-anchored boot: every per-worker observer restores its
+        latest snapshot and resumes folding at that position instead of
+        re-reading each worker's full (possibly trimmed) log."""
+        return {name: obs.bootstrap(snapshots, self._observer_id(name))
+                for name, obs in self._observers.items()}
+
+    def checkpoint(self, snapshots: SnapshotStore) -> Dict[str, int]:
+        """Persist every observer's folded state and announce it on the
+        corresponding worker bus (supervisor credentials may append
+        Checkpoint), so worker-bus coordinators can account for the
+        supervisor's cursor when trimming."""
+        return {name: obs.checkpoint(snapshots, self._observer_id(name),
+                                     client=self.clients[name])
+                for name, obs in self._observers.items()}
 
     def _harvest_fix(self, e) -> None:
         """Observer hook: workers publish explicit fix notes in result

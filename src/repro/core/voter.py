@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 from . import entries as E
 from .acl import BusClient
 from .entries import Entry, PayloadType
+from .lifecycle import Recoverable
 from .policy import PolicyState
 
 
@@ -41,7 +42,7 @@ Rule = Callable[[Dict[str, Any], Dict[str, Any]], Optional[VoteDecision]]
 # short-circuit, or None to pass to the next rule.
 
 
-class Voter:
+class Voter(Recoverable):
     """Base voter: plays INTENT + POLICY, appends VOTE."""
 
     voter_type = "base"
@@ -54,11 +55,38 @@ class Voter:
         self.cursor = 0
         self.policy = PolicyState()
         self.latency_s = 0.0  # cumulative voting latency (for Fig-5)
+        #: intent_ids this voter already voted on (primed from the log
+        #: suffix on bootstrap, so a replaying voter never re-votes)
+        self._voted: set = set()
+
+    # -- snapshot (replayable policy/history state only; rules are code) ----
+    def to_snapshot(self) -> Dict[str, Any]:
+        return {"cursor": self.cursor, "policy": self.policy.to_body()}
+
+    def restore_snapshot(self, snap: Dict[str, Any]) -> None:
+        self.cursor = snap["cursor"]
+        self.policy = PolicyState.from_body(snap["policy"])
+
+    def bootstrap(self, snapshots) -> int:
+        """Snapshot-anchored boot, plus a re-vote prime: scan the suffix
+        for this voter's own Vote entries before replaying it (the Intent
+        precedes its Vote in log order — without the prime a replaying
+        voter would vote twice; duplicates are harmless to the Decider
+        but pollute the log)."""
+        pos = super().bootstrap(snapshots)
+        for e in self.client.read(pos, types=(PayloadType.VOTE,)):
+            if e.body.get("voter_id") == self.voter_id:
+                self._voted.add(e.body["intent_id"])
+        return pos
 
     # -- the state-machine transition ---------------------------------------
     def handle(self, entry: Entry) -> None:
         if entry.type == PayloadType.POLICY:
             self.policy.apply(entry)
+            return
+        if entry.type == PayloadType.CHECKPOINT:
+            self.policy.note_epoch(entry.body.get("driver_epoch"),
+                                   entry.body.get("elected_driver"))
             return
         if entry.type in self.observe_types:
             self.observe(entry)
@@ -66,11 +94,14 @@ class Voter:
             return
         if not self.policy.driver_is_current(entry.body.get("driver_id")):
             return  # fenced driver: ignore its intentions entirely
+        if entry.body["intent_id"] in self._voted:
+            return  # already voted (suffix replay after bootstrap)
         t0 = time.monotonic()
         d = self.decide(entry)
         self.latency_s += time.monotonic() - t0
         if d is None:
             return  # abstain
+        self._voted.add(entry.body["intent_id"])
         self.client.append(E.vote(
             entry.body["intent_id"], self.voter_type, self.voter_id,
             d.approve, d.reason))
@@ -84,11 +115,13 @@ class Voter:
     # -- play loop helpers ---------------------------------------------------
     def play_available(self) -> int:
         """Synchronously play all new relevant entries (INTENT + POLICY +
-        this voter's ``observe_types``, filtered at the backend); returns
-        #entries played."""
+        CHECKPOINT + this voter's ``observe_types``, filtered at the
+        backend); returns #entries played."""
+        if self.cursor == 0:  # fresh boot: anchor at the trim base
+            self.cursor = self.client.trim_base()
         tail = self.client.tail()
         types = (PayloadType.POLICY, PayloadType.INTENT,
-                 *self.observe_types)
+                 PayloadType.CHECKPOINT, *self.observe_types)
         played = self.client.read(self.cursor, tail, types=types)
         for e in played:
             self.handle(e)
@@ -219,6 +252,23 @@ class StatVoter(Voter):
         # intents seen before the overridden voter's vote arrived
         self._awaiting: Dict[str, Entry] = {}
 
+    def to_snapshot(self) -> Dict[str, Any]:
+        snap = super().to_snapshot()
+        snap.update({
+            "metric_history": self.history,
+            "rule_votes": self.rule_votes,
+            "user_mail": self.user_mail,
+            "awaiting": {i: e.to_dict() for i, e in self._awaiting.items()}})
+        return snap
+
+    def restore_snapshot(self, snap: Dict[str, Any]) -> None:
+        super().restore_snapshot(snap)
+        self.history = [float(v) for v in snap.get("metric_history", ())]
+        self.rule_votes = dict(snap.get("rule_votes", {}))
+        self.user_mail = [str(m) for m in snap.get("user_mail", ())]
+        self._awaiting = {i: Entry.from_dict(d)
+                          for i, d in snap.get("awaiting", {}).items()}
+
     def observe(self, entry: Entry) -> None:
         if entry.type == PayloadType.RESULT:
             v = entry.body.get("value", {}).get(self.metric)
@@ -233,7 +283,8 @@ class StatVoter(Voter):
                     # the rule voter rejected an intent we deferred on:
                     # run the (expensive) model-based judgement now
                     d = self._judge(pending)
-                    if d is not None:
+                    if d is not None and iid not in self._voted:
+                        self._voted.add(iid)
                         self.client.append(E.vote(
                             iid, self.voter_type, self.voter_id,
                             d.approve, d.reason))

@@ -33,7 +33,8 @@ def main() -> None:
         agent.send_mail(f"req-{r}", prompt_tokens=[1 + r, 2 + r, 3 + r])
     agent.run_until_idle(max_rounds=10 ** 6)
     served = 0
-    for t in trace_intents(agent.bus.read(0, types=TRACE_TYPES)):
+    for t in trace_intents(agent.bus.read(agent.bus.trim_base(),
+                                          types=TRACE_TYPES)):
         if t.kind == "serve_batch" and t.result and t.result["ok"]:
             served += t.result["value"]["batch"]
             print(f"batch of {t.result['value']['batch']} "

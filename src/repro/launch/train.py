@@ -69,7 +69,8 @@ def main() -> None:
     agent.run_until_idle(max_rounds=10 ** 6)
 
     losses = [t.result["value"]["loss"]
-              for t in trace_intents(bus.read(0, types=TRACE_TYPES))
+              for t in trace_intents(bus.read(bus.trim_base(),
+                                              types=TRACE_TYPES))
               if t.kind == "train_chunk" and t.result and t.result["ok"]]
     s = summarize_bus(bus)
     print(f"arch={cfg.arch_id} steps={env.step}/{args.steps} "
