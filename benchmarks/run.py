@@ -2,6 +2,8 @@
 
   bench_bus_throughput -> bus data plane (append_many batches, push-down
                           filtered reads) across backends
+  bench_netbus    -> NetBus push-wake latency / idle CPU vs polling /
+                     wire throughput (emits BENCH_netbus.json)
   bench_overhead  -> Fig 5 (LogAct overhead: stages, log bytes, backends)
   bench_voters    -> Fig 6 (Utility/ASR/latency/tokens per defense)
   bench_hotswap   -> Fig 7 (hot-swapping voters via policy entries)
@@ -23,7 +25,7 @@ import time
 import traceback
 
 #: benches exercised by the --quick CI smoke (hermetic, seconds not minutes)
-QUICK = ("bus_throughput", "hotswap", "recovery")
+QUICK = ("bus_throughput", "netbus", "hotswap", "recovery")
 
 
 def main(argv=None) -> None:
@@ -38,11 +40,12 @@ def main(argv=None) -> None:
         # or call time; env is the contract either way)
         os.environ["REPRO_BENCH_QUICK"] = "1"
 
-    from . import (bench_bus_throughput, bench_hotswap, bench_overhead,
-                   bench_recovery, bench_roofline, bench_swarm,
-                   bench_voters)
+    from . import (bench_bus_throughput, bench_hotswap, bench_netbus,
+                   bench_overhead, bench_recovery, bench_roofline,
+                   bench_swarm, bench_voters)
     benches = [
         ("bus_throughput", bench_bus_throughput.main),
+        ("netbus", bench_netbus.main),
         ("overhead", bench_overhead.main),
         ("voters", bench_voters.main),
         ("hotswap", bench_hotswap.main),

@@ -15,6 +15,7 @@ from .introspect import (BusObserver, TRACE_TYPES, health_check,
 from .kernel import (AgentKernel, AGENT_IMAGES, TrimPolicy, VOTER_LIBRARY,
                      register_image)
 from .lifecycle import CheckpointCoordinator, Recoverable
+from .netbus import NetBus, PROTO_VERSION
 from .policy import DeciderPolicy, PolicyState
 from .recovery import RecoveryPlanner, committed_unexecuted
 from .snapshot import DirSnapshotStore, MemorySnapshotStore, SnapshotStore
@@ -25,7 +26,7 @@ from .voter import (RuleVoter, StatVoter, Voter, VoteDecision,
 __all__ = [
     "entries", "AclError", "BusClient", "Permissions", "ROLES",
     "LogActAgent", "AgentBus", "KvBus", "MemoryBus", "SqliteBus",
-    "TrimmedError", "make_bus",
+    "TrimmedError", "make_bus", "NetBus", "PROTO_VERSION",
     "Decider", "Driver", "Planner", "ScriptPlanner", "Entry", "Payload",
     "PayloadType", "Executor", "health_check", "summarize_bus",
     "trace_intents", "BusObserver", "TRACE_TYPES",

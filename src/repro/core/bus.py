@@ -144,6 +144,8 @@ class AgentBus:
     """Abstract AgentBus. Subclasses implement the storage methods."""
 
     def append(self, payload: Payload) -> int:
+        """Append one payload; returns its assigned position. Sugar for a
+        one-element ``append_many`` (same linearizability guarantee)."""
         return self.append_many([payload])[0]
 
     def append_many(self, payloads: Sequence[Payload]) -> List[int]:
@@ -152,6 +154,11 @@ class AgentBus:
 
     def read(self, start: int, end: Optional[int] = None,
              types: TypeFilter = None) -> List[Entry]:
+        """Range read of ``[start, end)`` (``end=None`` = current tail),
+        in position order. ``types`` is pushed down to the backend's native
+        filter. Raises ``TrimmedError`` if ``start`` is below the trim
+        base. Returned entries are shared immutable records — never mutate
+        a payload body; copy first."""
         raise NotImplementedError
 
     def tail(self) -> int:
@@ -224,16 +231,27 @@ class AgentBus:
             if deadline is not None:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
-                    return False
+                    # Final recheck before reporting a timeout: an append
+                    # can land between the last tail probe above and the
+                    # deadline expiring here. MemoryBus's Condition.wait_for
+                    # rechecks its predicate after a timed-out wait; without
+                    # this, the durable backends would report False for an
+                    # append that IS already visible — a lost wakeup the
+                    # caller has no way to distinguish from a quiet log.
+                    return self.tail() > known_tail
                 time.sleep(min(wait, remaining))
             else:
                 time.sleep(wait)
             wait = min(wait * 2, _BACKOFF_MAX)
 
     def read_type(self, *types: PayloadType, start: int = 0) -> List[Entry]:
+        """Convenience: filtered read of ``[start, tail)`` for the given
+        payload types (push-down filter, like ``read(types=...)``)."""
         return self.read(start, types=types)
 
     def close(self) -> None:  # pragma: no cover - backend-specific
+        """Release backend resources (connections, sockets). Idempotent;
+        a no-op for backends that hold none."""
         pass
 
 
@@ -437,6 +455,8 @@ class SqliteBus(AgentBus):
         return [self._decode(p, ts, pl) for p, ts, pl in rows]
 
     def tail(self) -> int:
+        """Position one past the last row (a fully trimmed empty table
+        reports the durable trim base, not 0)."""
         row = self._conn().execute(
             "SELECT COALESCE(MAX(position)+1, 0) FROM log").fetchone()
         return max(int(row[0]), self._trim_base)
@@ -715,6 +735,9 @@ class KvBus(AgentBus):
         return out
 
     def tail(self) -> int:
+        """Position one past the last entry, from the cached segment index
+        (refreshed by one free LIST; new segments cost one charged GET
+        each, which primes the read cache)."""
         with self._lock:
             ops = self._refresh()
             t = self._tail
@@ -722,6 +745,8 @@ class KvBus(AgentBus):
         return t
 
     def trim_base(self) -> int:
+        """First readable position, re-read from the durable marker object
+        so an externally advanced base is picked up."""
         with self._lock:
             self._load_marker()
             return self._trim_base
@@ -820,7 +845,10 @@ class KvBus(AgentBus):
 
 def make_bus(backend: str = "memory", path: Optional[str] = None,
              **kw) -> AgentBus:
-    """Factory. backend in {'memory', 'sqlite', 'kv'}."""
+    """Factory. backend in {'memory', 'sqlite', 'kv', 'net'}.
+
+    For ``'net'``, ``path`` is the bus server address (``"host:port"``)
+    and ``kw`` is forwarded to ``NetBus`` (client_id, role, timeouts)."""
     if backend == "memory":
         return MemoryBus()
     if backend == "sqlite":
@@ -829,4 +857,8 @@ def make_bus(backend: str = "memory", path: Optional[str] = None,
     if backend == "kv":
         assert path, "kv backend needs a root directory"
         return KvBus(path, **kw)
+    if backend == "net":
+        assert path, "net backend needs a host:port address"
+        from .netbus import NetBus  # function-level: netbus imports this module
+        return NetBus(path, **kw)
     raise ValueError(f"unknown bus backend: {backend}")

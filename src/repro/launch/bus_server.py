@@ -1,0 +1,367 @@
+"""The bus server: exposes any local bus backend to NetBus clients.
+
+``BusServer`` fronts an ``AgentBus`` (``SqliteBus``/``KvBus`` for
+durability, ``MemoryBus`` for tests) with the length-prefixed JSON wire
+protocol of ``repro.core.netbus`` (frozen in ``docs/bus-protocol.md``).
+This is the piece that makes the log the *externally reachable* source of
+truth: Driver/Voter/Executor processes on any machine converge on one
+server, and the server's single view of the tail gives networked clients
+MemoryBus-grade wake semantics:
+
+* every append (from any client) advances the server's tail under a
+  condition variable, and
+* an ``{"event": "append", "tail": t}`` frame is **pushed** to every
+  subscribed connection — no client ever polls the backing store to learn
+  the log moved.
+
+Threading model: one accept loop; per connection, one *reader* thread
+(parses requests, executes ops against the bus, sends the reply). All
+sends on a connection are synchronous under a per-connection lock, so
+pushes never interleave mid-frame with a reply and the append→wake path
+has no intermediate thread hop. The appender's own connection is excluded
+from the push fan-out (its reply already carries the new tail); a wedged
+subscriber can stall an appender's reader for at most the socket send
+timeout, after which the subscriber's connection is killed. Backends are
+thread-safe, so op execution needs no global lock; only append-dedupe
+bookkeeping is serialized.
+
+Append idempotency: each ``append`` request carries a client-generated
+``batch`` token. The server remembers ``(client_id, batch) -> positions``
+in a bounded LRU and replays the recorded positions when a client retries
+after a lost connection — exactly-once append semantics within one server
+incarnation (the ``epoch`` returned at hello; clients fence on it).
+
+Server-side ACL (defense in depth): a client that declares a ``role`` at
+hello gets the corresponding ``repro.core.acl.ROLES`` permission set
+enforced server-side — appends outside the role's type set are rejected
+with ``error="acl"``, and reads are intersected with the role's readable
+types before the push-down filter reaches the backend. Clients without a
+role are unrestricted (the client-side ``BusClient`` remains the primary
+ACL layer, as with local backends).
+
+CLI (used by the process harness and tests)::
+
+    python -m repro.launch.bus_server --backend sqlite --path bus.db \
+        --host 127.0.0.1 --port 0 --port-file /tmp/bus.port
+
+``--port 0`` binds an ephemeral port; ``--port-file`` publishes the bound
+port for children that need to find the server.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import struct
+import threading
+import uuid
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from repro.core.acl import AclError, ROLES
+from repro.core.bus import AgentBus, TrimmedError, make_bus
+from repro.core.entries import Payload, PayloadType
+from repro.core.netbus import (MAX_FRAME_BYTES, PROTO_VERSION, recv_frame,
+                               send_frame)
+
+#: Retained (client_id, batch) -> positions records for append dedupe.
+_DEDUPE_MAX = 4096
+
+
+class _Conn:
+    """One client connection: socket + synchronous sender.
+
+    All frames (replies and push events) are sent synchronously from the
+    calling thread under one lock, so frames never interleave and there is
+    no writer-thread wakeup on the append→wake path. Replies block only
+    the connection's own reader (ops on one connection are sequential
+    anyway); push events are sent from the *appender's* reader thread into
+    other connections' sockets, so a wedged subscriber could stall it —
+    bounded by the socket send timeout, after which the subscriber's
+    connection is killed (the client reconnects and re-seeds its view).
+    """
+
+    SEND_TIMEOUT_S = 10.0
+
+    def __init__(self, sock: socket.socket, addr: Tuple[str, int]) -> None:
+        self.sock = sock
+        self.addr = addr
+        self.client_id: str = f"anon-{addr[0]}:{addr[1]}"
+        self.role: Optional[str] = None
+        self.subscribed = False
+        self.alive = True
+        # SO_SNDTIMEO bounds blocking sends without touching recv behavior.
+        self.sock.setsockopt(
+            socket.SOL_SOCKET, socket.SO_SNDTIMEO,
+            struct.pack("ll", int(self.SEND_TIMEOUT_S), 0))
+        self._send_lock = threading.Lock()
+
+    def send(self, obj: Dict[str, Any]) -> None:
+        if not self.alive:
+            return
+        try:
+            with self._send_lock:
+                send_frame(self.sock, obj)
+        except (OSError, ValueError):
+            self.close()
+
+    def close(self) -> None:
+        self.alive = False
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:  # pragma: no cover
+            pass
+
+
+class BusServer:
+    """Socket front-end for an ``AgentBus``; see module docstring."""
+
+    def __init__(self, bus: AgentBus, host: str = "127.0.0.1",
+                 port: int = 0) -> None:
+        self.bus = bus
+        #: unique per server incarnation; clients fence reconnects on it.
+        self.epoch = uuid.uuid4().hex
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(64)
+        self.address: Tuple[str, int] = self._listener.getsockname()[:2]
+        self._tail_cond = threading.Condition()
+        self._tail = bus.tail()
+        self._append_lock = threading.Lock()  # dedupe-check + append atomicity
+        self._dedupe: "OrderedDict[Tuple[str, str], List[int]]" = OrderedDict()
+        self._conns: Set[_Conn] = set()
+        self._conns_lock = threading.Lock()
+        self._closed = False
+        self._accept_thread: Optional[threading.Thread] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "BusServer":
+        """Serve in a background thread (in-process use: tests, benches)."""
+        self._accept_thread = threading.Thread(
+            target=self.serve_forever, daemon=True, name="bus-accept")
+        self._accept_thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        while not self._closed:
+            try:
+                sock, addr = self._listener.accept()
+            except OSError:
+                return  # listener closed
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn = _Conn(sock, addr)
+            with self._conns_lock:
+                self._conns.add(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True, name=f"bus-r-{addr[1]}").start()
+
+    def close(self) -> None:
+        """Stop accepting, drop every connection. Does NOT close the bus
+        (the owner may keep using it, e.g. to inspect state in tests)."""
+        self._closed = True
+        try:
+            # shutdown() first: close() alone does not wake a thread blocked
+            # in accept() (the kernel socket survives until the syscall
+            # returns), which would leave the port in LISTEN forever.
+            self._listener.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._listener.close()
+        except OSError:  # pragma: no cover
+            pass
+        with self._conns_lock:
+            conns = list(self._conns)
+        for c in conns:
+            c.close()
+
+    # -- per-connection reader ----------------------------------------------
+    def _serve_conn(self, conn: _Conn) -> None:
+        try:
+            while not self._closed:
+                frame = recv_frame(conn.sock)
+                rid = frame.get("id")
+                op = frame.get("op")
+                if op == "hello":
+                    conn.send(self._hello(conn, frame))
+                    continue
+                try:
+                    resp = self._dispatch(conn, op, frame)
+                except TrimmedError as e:
+                    resp = {"ok": False, "error": "trimmed",
+                            "requested": e.requested, "base": e.base}
+                except AclError as e:
+                    resp = {"ok": False, "error": "acl", "message": str(e)}
+                except Exception as e:  # defensive: never kill the conn
+                    resp = {"ok": False, "error": "internal",
+                            "message": f"{type(e).__name__}: {e}"}
+                if rid is not None:
+                    resp["id"] = rid
+                    conn.send(resp)
+        except (OSError, ConnectionError, ValueError, json.JSONDecodeError):
+            pass
+        finally:
+            with self._conns_lock:
+                self._conns.discard(conn)
+            conn.close()
+
+    def _hello(self, conn: _Conn, frame: Dict[str, Any]) -> Dict[str, Any]:
+        if frame.get("proto") != PROTO_VERSION:
+            return {"ok": False, "error": "proto",
+                    "message": f"server speaks proto {PROTO_VERSION}, "
+                               f"client sent {frame.get('proto')!r}"}
+        role = frame.get("role")
+        if role is not None and role not in ROLES:
+            return {"ok": False, "error": "acl",
+                    "message": f"unknown role {role!r}"}
+        conn.client_id = str(frame.get("client_id") or conn.client_id)
+        conn.role = role
+        # Subscribe BEFORE reading the tail for the reply: an append landing
+        # between the two is then pushed, so the client's view (seeded with
+        # the reply tail, advanced by pushes) never has a notification gap.
+        conn.subscribed = bool(frame.get("subscribe", True))
+        tail = self.bus.tail()
+        with self._tail_cond:
+            if tail > self._tail:  # out-of-band appends to the backing store
+                self._tail = tail
+                self._tail_cond.notify_all()
+            tail = self._tail
+        return {"ok": True, "epoch": self.epoch, "tail": tail,
+                "trim_base": self.bus.trim_base(),
+                "max_frame": MAX_FRAME_BYTES}
+
+    # -- op dispatch ---------------------------------------------------------
+    def _dispatch(self, conn: _Conn, op: Optional[str],
+                  frame: Dict[str, Any]) -> Dict[str, Any]:
+        if op == "append":
+            return self._op_append(conn, frame)
+        if op == "read":
+            return self._op_read(conn, frame)
+        if op == "tail":
+            return {"ok": True, "tail": self._refresh_tail()}
+        if op == "trim_base":
+            return {"ok": True, "base": self.bus.trim_base()}
+        if op == "trim":
+            base = self.bus.trim(int(frame["min_position"]))
+            return {"ok": True, "base": base}
+        if op == "compact":
+            return {"ok": True, "compacted": int(self.bus.compact())}
+        if op == "wait":
+            return self._op_wait(frame)
+        if op == "ping":
+            return {"ok": True, "epoch": self.epoch}
+        return {"ok": False, "error": "bad_op",
+                "message": f"unknown op {op!r}"}
+
+    def _op_append(self, conn: _Conn, frame: Dict[str, Any]) -> Dict[str, Any]:
+        payloads = [Payload(PayloadType(p["type"]), p["body"])
+                    for p in frame["payloads"]]
+        if conn.role is not None:
+            denied = {p.type for p in payloads} - ROLES[conn.role].append
+            if denied:
+                raise AclError(
+                    f"{conn.client_id} (role={conn.role}) may not append "
+                    f"{sorted(t.value for t in denied)}")
+        batch = frame.get("batch")
+        key = (conn.client_id, str(batch)) if batch else None
+        with self._append_lock:
+            if key is not None:
+                hit = self._dedupe.get(key)
+                if hit is not None:  # retried batch: replay, don't re-append
+                    self._dedupe.move_to_end(key)
+                    return {"ok": True, "positions": hit, "deduped": True}
+            positions = self.bus.append_many(payloads)
+            if key is not None:
+                self._dedupe[key] = positions
+                while len(self._dedupe) > _DEDUPE_MAX:
+                    self._dedupe.popitem(last=False)
+        # The appender learns the new tail from this reply (its client folds
+        # it into the local view), so its own connection is excluded from
+        # the push fan-out — one less send and one less thread wakeup
+        # contending with the waiters being woken.
+        self._notify_append(positions[-1] + 1, exclude=conn)
+        return {"ok": True, "positions": positions}
+
+    def _op_read(self, conn: _Conn, frame: Dict[str, Any]) -> Dict[str, Any]:
+        types = frame.get("types")
+        fs = (None if types is None
+              else [PayloadType(t) for t in types])
+        if conn.role is not None:
+            allowed = ROLES[conn.role].read
+            fs = sorted(((set(fs) if fs is not None else set(PayloadType))
+                         & allowed), key=lambda t: t.value)
+        entries = self.bus.read(int(frame["start"]), frame.get("end"),
+                                types=fs)
+        return {"ok": True, "entries": [e.to_dict() for e in entries]}
+
+    def _op_wait(self, frame: Dict[str, Any]) -> Dict[str, Any]:
+        """The protocol's blocking wait (for thin clients without a push
+        reader). NB: ops on one connection are sequential, so this blocks
+        that connection only; NetBus proper never calls it from its hot
+        path."""
+        known = int(frame["known_tail"])
+        timeout = min(float(frame.get("timeout", 30.0)), 300.0)
+        with self._tail_cond:
+            advanced = self._tail_cond.wait_for(
+                lambda: self._tail > known, timeout)
+            return {"ok": True, "advanced": advanced, "tail": self._tail}
+
+    # -- tail + push notifications ------------------------------------------
+    def _refresh_tail(self) -> int:
+        """Reconcile with the backing store (an out-of-band writer — e.g. a
+        co-located process sharing the SQLite file — may have appended
+        around the server) and notify if it moved."""
+        t = self.bus.tail()
+        self._notify_append(t)
+        with self._tail_cond:
+            return self._tail
+
+    def _notify_append(self, tail: int,
+                       exclude: Optional[_Conn] = None) -> None:
+        with self._tail_cond:
+            if tail <= self._tail:
+                return
+            self._tail = tail
+            self._tail_cond.notify_all()
+        event = {"event": "append", "tail": tail}
+        with self._conns_lock:
+            subs = [c for c in self._conns
+                    if c.subscribed and c.alive and c is not exclude]
+        for c in subs:
+            c.send(event)  # synchronous push from the appender's thread
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description="LogAct bus server")
+    ap.add_argument("--backend", default="sqlite",
+                    choices=["memory", "sqlite", "kv"])
+    ap.add_argument("--path", default=None,
+                    help="backend storage path (sqlite file / kv root)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 = bind an ephemeral port")
+    ap.add_argument("--port-file", default=None,
+                    help="write the bound port here once listening")
+    args = ap.parse_args(argv)
+    bus = make_bus(args.backend, path=args.path)
+    server = BusServer(bus, host=args.host, port=args.port)
+    if args.port_file:
+        tmp = args.port_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(str(server.address[1]))
+        os.replace(tmp, args.port_file)  # atomic: readers never see partial
+    server.serve_forever()
+
+
+if __name__ == "__main__":
+    main()

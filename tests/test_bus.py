@@ -351,3 +351,156 @@ def test_make_bus_factory(tmp_path):
     assert isinstance(make_bus("kv", path=str(tmp_path / "kv2")), KvBus)
     with pytest.raises(ValueError):
         make_bus("bogus")
+
+
+def test_make_bus_net_factory(tmp_path):
+    from repro.core.netbus import NetBus
+    from repro.launch.bus_server import BusServer
+
+    srv = BusServer(MemoryBus()).start()
+    try:
+        bus = make_bus("net", path=f"{srv.address[0]}:{srv.address[1]}",
+                       client_id="factory-test")
+        assert isinstance(bus, NetBus)
+        assert bus.append(E.mail("via factory")) == 0
+        bus.close()
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Backend-parametrized conformance suite: the SAME assertions run against
+# every backend, so no backend can drift from the contract frozen in
+# docs/bus-protocol.md. Adding a backend = adding one fixture param.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(params=["memory", "sqlite", "kv", "net"])
+def any_bus(request, tmp_path):
+    if request.param == "memory":
+        yield MemoryBus()
+    elif request.param == "sqlite":
+        bus = SqliteBus(str(tmp_path / "conf.db"))
+        yield bus
+        bus.close()
+    elif request.param == "kv":
+        yield KvBus(str(tmp_path / "conf-kv"))
+    else:  # net: NetBus client against an in-process server over SQLite
+        from repro.core.netbus import NetBus
+        from repro.launch.bus_server import BusServer
+
+        backing = SqliteBus(str(tmp_path / "conf-net.db"))
+        srv = BusServer(backing).start()
+        bus = NetBus(f"{srv.address[0]}:{srv.address[1]}",
+                     client_id="conformance")
+        yield bus
+        bus.close()
+        srv.close()
+        backing.close()
+
+
+class TestBusConformance:
+    def test_append_contract(self, any_bus):
+        assert any_bus.tail() == 0
+        assert any_bus.append(E.mail("a")) == 0
+        ps = any_bus.append_many([E.mail("b"), E.vote("i1", "rule", "v", True)])
+        assert ps == [1, 2]  # dense, contiguous, in batch order
+        assert any_bus.append_many([]) == []
+        assert any_bus.tail() == 3
+
+    def test_read_contract(self, any_bus):
+        for i in range(6):
+            any_bus.append(E.mail(f"m{i}"))
+            any_bus.append(E.intent("k", {"i": i}, "d", intent_id=f"i{i}"))
+        full = any_bus.read(0)
+        assert [e.position for e in full] == list(range(12))
+        assert [e.position for e in any_bus.read(3, 7)] == [3, 4, 5, 6]
+        assert any_bus.read(any_bus.tail()) == []
+        got = any_bus.read(0, types=[PayloadType.INTENT])
+        assert [e.body["intent_id"] for e in got] == \
+            [f"i{i}" for i in range(6)]
+        got = any_bus.read(2, 9, types=[PayloadType.MAIL])
+        want = [e for e in full
+                if 2 <= e.position < 9 and e.type == PayloadType.MAIL]
+        assert [e.position for e in got] == [e.position for e in want]
+
+    def test_poll_contract(self, any_bus):
+        any_bus.append(E.mail("x"))
+        any_bus.append(E.commit("i1", "dec"))
+        got = any_bus.poll(0, [PayloadType.COMMIT], timeout=2.0)
+        assert [e.body["intent_id"] for e in got] == ["i1"]
+        assert any_bus.poll(any_bus.tail(), [PayloadType.COMMIT],
+                            timeout=0.05) == []
+
+    def test_wait_contract(self, any_bus):
+        # timeout with no append -> False
+        assert any_bus.wait(any_bus.tail(), timeout=0.05) is False
+        # append during the wait -> True
+        out = {}
+
+        def waiter():
+            out["woke"] = any_bus.wait(any_bus.tail(), timeout=5.0)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.05)
+        any_bus.append(E.mail("wake"))
+        t.join(timeout=5.0)
+        assert not t.is_alive() and out["woke"] is True
+        # already-stale known_tail -> immediate True even with timeout=0
+        assert any_bus.wait(any_bus.tail() - 1, timeout=0) is True
+
+    def test_trim_contract(self, any_bus):
+        from repro.core.bus import TrimmedError
+
+        for i in range(4):
+            any_bus.append(E.mail(f"m{i}"))  # one entry per batch/segment
+        assert any_bus.trim_base() == 0
+        assert any_bus.trim(2) == 2
+        assert any_bus.trim_base() == 2
+        assert any_bus.tail() == 4  # positions survive the trim
+        assert [e.position for e in any_bus.read(2)] == [2, 3]
+        with pytest.raises(TrimmedError) as ei:
+            any_bus.read(0)
+        assert ei.value.requested == 0 and ei.value.base == 2
+        assert any_bus.trim(1) == 2  # monotonic: never rewinds
+        assert any_bus.compact() >= 0
+        assert [e.position for e in any_bus.read(2)] == [2, 3]
+
+
+def test_backoff_wait_rechecks_tail_at_deadline():
+    """Regression (lost-wakeup window): _backoff_wait used to return False
+    the moment the deadline passed, WITHOUT a final tail recheck — so an
+    append landing while the last tail() probe was still in flight was
+    reported as a timeout. MemoryBus's Condition.wait_for rechecks its
+    predicate after a timed-out wait; the durable backends must match."""
+
+    class SlowTailBus(MemoryBus):
+        calls = 0
+
+        def _wait_for_append(self, known_tail, timeout):
+            return self._backoff_wait(known_tail, timeout)  # durable path
+
+        def tail(self):
+            self.calls += 1
+            if self.calls == 1:
+                # First probe: returns the stale tail, and while it is
+                # "in flight" an append lands and the deadline expires.
+                t = super().tail()
+                super().append_many([E.mail("raced")])
+                time.sleep(0.02)  # > the 10ms wait() timeout below
+                return t
+            return super().tail()
+
+    bus = SlowTailBus()
+    # the append IS visible by the deadline; wait must report it
+    assert bus.wait(0, timeout=0.01) is True
+
+
+def test_wait_semantics_identical_across_backends(tmp_path):
+    """wait() on every backend: False on a quiet timeout, True when the
+    tail is already past known_tail (even with timeout=0)."""
+    for bus in backends(tmp_path):
+        assert bus.wait(bus.tail(), timeout=0.02) is False
+        bus.append(E.mail("x"))
+        assert bus.wait(0, timeout=0) is True
+        assert bus.wait(bus.tail() - 1, timeout=0.01) is True

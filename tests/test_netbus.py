@@ -1,0 +1,276 @@
+"""NetBus + bus_server: wire protocol, push wakeups, reconnect fencing,
+server-side ACL, and the cross-process SIGKILL failover acceptance test
+(paper §3: components isolated on different physical processes; §3.2:
+recovery = load latest snapshot + replay the log suffix)."""
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import entries as E
+from repro.core.acl import AclError, BusClient
+from repro.core.bus import MemoryBus, SqliteBus, TrimmedError
+from repro.core.entries import PayloadType
+from repro.core.netbus import NetBus, PROTO_VERSION, recv_frame, send_frame
+from repro.launch.bus_server import BusServer
+from repro.launch.procs import (BusServerProcess, incr_plans, sigkill,
+                                spawn_component)
+
+
+@pytest.fixture
+def server():
+    srv = BusServer(MemoryBus()).start()
+    yield srv
+    srv.close()
+
+
+def addr(srv):
+    return f"{srv.address[0]}:{srv.address[1]}"
+
+
+def test_roundtrip_and_cross_client_visibility(server):
+    a = NetBus(addr(server), client_id="a")
+    b = NetBus(addr(server), client_id="b")
+    try:
+        assert a.append_many([E.mail("m0"), E.mail("m1")]) == [0, 1]
+        assert a.tail() == 2  # read-your-writes from the local view
+        es = b.read(0)
+        assert [e.body["text"] for e in es] == ["m0", "m1"]
+        assert es[0].type == PayloadType.MAIL
+        # push-down type filter travels the wire
+        b.append(E.vote("i1", "rule", "v", True))
+        assert [e.position for e in a.read(0, types=[PayloadType.VOTE])] == [2]
+        assert a.read(0, types=[PayloadType.COMMIT]) == []
+    finally:
+        a.close()
+        b.close()
+
+
+def test_push_wake_across_clients(server):
+    """The tentpole property: a waiting client is woken by a server push
+    when ANOTHER client appends — no polling of the backing store."""
+    waiter = NetBus(addr(server), client_id="waiter")
+    appender = NetBus(addr(server), client_id="appender")
+    try:
+        out = {}
+
+        def wait_loop():
+            out["woke"] = waiter.wait(waiter.tail(), timeout=10.0)
+
+        t = threading.Thread(target=wait_loop)
+        t.start()
+        time.sleep(0.1)
+        before = waiter.n_requests
+        appender.append(E.mail("wake up"))
+        t.join(timeout=10.0)
+        assert not t.is_alive() and out["woke"] is True
+        assert waiter.tail() == 1  # view advanced by the push alone
+        # the wake cost the waiter ZERO additional requests
+        assert waiter.n_requests == before
+    finally:
+        waiter.close()
+        appender.close()
+
+
+def test_trimmed_error_travels_the_wire(server):
+    c = NetBus(addr(server), client_id="c")
+    try:
+        c.append_many([E.mail(f"m{i}") for i in range(4)])
+        assert c.trim(2) == 2
+        assert c.trim_base() == 2
+        with pytest.raises(TrimmedError) as ei:
+            c.read(0)
+        assert ei.value.requested == 0 and ei.value.base == 2
+        assert [e.position for e in c.read(2)] == [2, 3]
+    finally:
+        c.close()
+
+
+def test_server_side_role_acl(server):
+    v = NetBus(addr(server), client_id="v", role="voter")
+    try:
+        with pytest.raises(AclError):
+            v.append(E.mail("voters cannot mail"))
+        assert v.append(E.vote("i1", "rule", "v", True)) == 0
+    finally:
+        v.close()
+    with pytest.raises(ConnectionError):
+        NetBus(addr(server), client_id="x", role="no-such-role",
+               connect_timeout=2.0)
+
+
+def test_busclient_layers_over_netbus(server):
+    """Client-side ACL (BusClient) composes with NetBus unchanged."""
+    bus = NetBus(addr(server), client_id="layered")
+    try:
+        ex = BusClient(bus, "executor-1", "executor")
+        with pytest.raises(AclError):
+            ex.append(E.vote("i", "rule", "x", True))
+        ex.append(E.result("i", True, {}, "executor-1"))
+        assert all(e.type != PayloadType.VOTE for e in ex.read(0))
+    finally:
+        bus.close()
+
+
+def test_append_batch_token_dedupe(server):
+    """A retried append with the same batch token must not double-append:
+    the server replays the recorded positions (exactly-once per epoch)."""
+    c = NetBus(addr(server), client_id="dup")
+    try:
+        wire = [{"type": "Mail", "body": {"text": "once", "sender": "u"}}]
+        r1 = c._request("append", {"payloads": wire, "batch": "tok-1"})
+        r2 = c._request("append", {"payloads": wire, "batch": "tok-1"})
+        assert r1["positions"] == r2["positions"]
+        assert r2.get("deduped") is True
+        assert c.tail(refresh=True) == 1
+    finally:
+        c.close()
+
+
+def test_reconnect_after_server_restart(tmp_path):
+    """Epoch-fenced reconnect: the client survives a full server restart
+    (durable backing), re-handshakes, observes the new epoch, and its
+    push subscription works on the new connection."""
+    backing = SqliteBus(str(tmp_path / "bus.db"))
+    srv = BusServer(backing).start()
+    c = NetBus(addr(srv), client_id="c")
+    w = NetBus(addr(srv), client_id="w")
+    c.append_many([E.mail("before-0"), E.mail("before-1")])
+    first_epoch = c.server_epoch
+    srv.close()
+    srv2 = None  # rebind the same port (lingering sockets may delay it)
+    for _ in range(200):
+        try:
+            srv2 = BusServer(backing, port=srv.address[1]).start()
+            break
+        except OSError:
+            time.sleep(0.05)
+    assert srv2 is not None
+    try:
+        assert c.append(E.mail("after-restart")) == 2
+        assert c.server_epoch == srv2.epoch != first_epoch
+        assert c.n_reconnects >= 1
+        out = {}
+        t = threading.Thread(target=lambda: out.setdefault(
+            "woke", w.wait(w.tail(refresh=True), timeout=10.0)))
+        t.start()
+        time.sleep(0.1)
+        c.append(E.mail("wake the resubscribed waiter"))
+        t.join(timeout=10.0)
+        assert not t.is_alive() and out["woke"] is True
+    finally:
+        c.close()
+        w.close()
+        srv2.close()
+        backing.close()
+
+
+def test_protocol_version_mismatch(server):
+    """A wrong proto at hello is rejected with error='proto' (the frozen
+    versioning rule in docs/bus-protocol.md)."""
+    import socket
+
+    s = socket.create_connection(server.address, timeout=5.0)
+    try:
+        send_frame(s, {"op": "hello", "proto": PROTO_VERSION + 1,
+                       "client_id": "relic"})
+        resp = recv_frame(s)
+        assert resp["ok"] is False and resp["error"] == "proto"
+    finally:
+        s.close()
+
+
+def test_server_wait_op(server):
+    """The wire protocol's blocking wait op (for thin clients)."""
+    a = NetBus(addr(server), client_id="a")
+    b = NetBus(addr(server), client_id="b")
+    try:
+        assert a.server_wait(a.tail(), timeout=0.1) is False
+        out = {}
+        t = threading.Thread(target=lambda: out.setdefault(
+            "adv", a.server_wait(0, timeout=10.0)))
+        t.start()
+        time.sleep(0.05)
+        b.append(E.mail("x"))
+        t.join(timeout=10.0)
+        assert not t.is_alive() and out["adv"] is True
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# The acceptance test: Driver/Voter/Executor as three OS processes against a
+# bus_server process; SIGKILL the driver mid-plan; a standby driver elects
+# itself at epoch+1, silently replays the logged suffix, and completes the
+# plan with no duplicated inference or execution.
+# ---------------------------------------------------------------------------
+
+def test_process_failover_driver_sigkill(tmp_path):
+    n_steps = 6
+    spec = {"driver_id": "driver-main",
+            "plans": incr_plans(n_steps, work_s=0.2),
+            "snapshot_dir": str(tmp_path / "snaps"),
+            "takeover_after_s": 2.0}
+    procs = []
+    with BusServerProcess("sqlite", str(tmp_path / "bus.db"),
+                          str(tmp_path)) as srv:
+        address = srv.address
+        procs.append(spawn_component("executor", address, {}))
+        procs.append(spawn_component("voters", address, {}))
+        procs.append(spawn_component("standby", address, spec))
+        driver = spawn_component("driver", address, spec)
+        procs.append(driver)
+        cli = NetBus(address, client_id="test-cli")
+        try:
+            admin = BusClient(cli, "admin", "admin")
+            # require a real vote before commit, then start the plan
+            admin.append(E.policy("decider", {"mode": "first_voter"}))
+            admin.append(E.mail("go"))
+
+            def results():
+                return [e for e in cli.read(0, types=(PayloadType.RESULT,))
+                        if not e.body.get("recovered")]
+
+            deadline = time.monotonic() + 60
+            while len(results()) < 2:
+                assert time.monotonic() < deadline, \
+                    "primary never produced 2 results"
+                cli.wait(cli.tail(), timeout=1.0)
+            sigkill(driver)  # mid-plan crash, no cleanup
+
+            deadline = time.monotonic() + 90
+            while True:
+                infouts = cli.read(0, types=(PayloadType.INF_OUT,))
+                done = [e for e in infouts if e.body["plan"].get("done")]
+                if done and len(results()) >= n_steps:
+                    break
+                assert time.monotonic() < deadline, (
+                    f"plan never completed after takeover: "
+                    f"{len(infouts)} infouts, {len(results())} results")
+                cli.wait(cli.tail(), timeout=1.0)
+
+            # Deterministic replay was SILENT: exactly one InfOut per plan
+            # step (+1 for done) across both driver incarnations.
+            assert len(infouts) == n_steps + 1
+            # Lineage-scoped intent ids: no duplicates, no gaps.
+            iids = [e.body["intent_id"]
+                    for e in cli.read(0, types=(PayloadType.INTENT,))]
+            assert iids == [f"driver-main-i{i}" for i in range(n_steps)]
+            # Every step executed exactly once, in order.
+            res = results()
+            assert len(res) == n_steps
+            assert all(e.body["ok"] for e in res)
+            assert sorted(e.body["value"]["value"] for e in res) == \
+                list(range(1, n_steps + 1))
+            # The standby re-fenced: two driver elections, epochs ascending.
+            epochs = [e.body["policy"]["epoch"]
+                      for e in cli.read(0, types=(PayloadType.POLICY,))
+                      if e.body.get("scope") == "driver"]
+            assert len(epochs) == 2 and epochs[1] == epochs[0] + 1
+        finally:
+            cli.close()
+            for p in procs:
+                sigkill(p)

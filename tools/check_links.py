@@ -1,0 +1,112 @@
+"""Validate intra-repo references in markdown docs (CI docs job).
+
+Checks two kinds of reference:
+
+* Markdown links ``[text](target)`` whose target is a relative path —
+  resolved against the markdown file's directory; the target must exist.
+  ``http(s)://``, ``mailto:`` and pure-fragment (``#...``) targets are
+  skipped; a ``path#fragment`` target is checked for the path part only.
+* Backticked source anchors `` `path/to/file.py:123` `` — resolved
+  against the repository root; the file must exist and actually have
+  that many lines (so docs can't point at code that moved).
+
+Usage::
+
+    python tools/check_links.py README.md docs [more files/dirs...]
+
+Exits 1 listing every broken reference, 0 if all resolve.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Iterator, List, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: [text](target) — target captured up to the closing paren (no nesting
+#: in our docs); images (![...]) match too, which is what we want.
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+#: `path/file.ext:123` — a backticked repo path with a line number.
+LINE_ANCHOR = re.compile(r"`([\w][\w./-]*\.[A-Za-z0-9]+):(\d+)`")
+
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_markdown(paths: List[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, files in os.walk(p):
+                for f in sorted(files):
+                    if f.endswith(".md"):
+                        yield os.path.join(root, f)
+        else:
+            yield p
+
+
+def check_file(md_path: str) -> List[str]:
+    errors: List[str] = []
+    with open(md_path, encoding="utf-8") as f:
+        lines = f.readlines()
+    md_dir = os.path.dirname(os.path.abspath(md_path))
+
+    def err(lineno: int, msg: str) -> None:
+        errors.append(f"{md_path}:{lineno}: {msg}")
+
+    refs: List[Tuple[int, str]] = []          # markdown link targets
+    anchors: List[Tuple[int, str, int]] = []  # (lineno, path, line)
+    in_code_block = False
+    for i, line in enumerate(lines, 1):
+        if line.lstrip().startswith("```"):
+            in_code_block = not in_code_block
+            continue
+        if in_code_block:
+            continue
+        for m in MD_LINK.finditer(line):
+            refs.append((i, m.group(1)))
+        for m in LINE_ANCHOR.finditer(line):
+            anchors.append((i, m.group(1), int(m.group(2))))
+
+    for lineno, target in refs:
+        if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        resolved = os.path.normpath(os.path.join(md_dir, path))
+        if not os.path.exists(resolved):
+            err(lineno, f"broken link: ({target}) -> {resolved}")
+
+    for lineno, path, line_no in anchors:
+        resolved = os.path.normpath(os.path.join(REPO_ROOT, path))
+        if not os.path.exists(resolved):
+            err(lineno, f"broken anchor: `{path}:{line_no}` "
+                        f"(file not found)")
+            continue
+        with open(resolved, encoding="utf-8", errors="replace") as f:
+            n_lines = sum(1 for _ in f)
+        if line_no < 1 or line_no > n_lines:
+            err(lineno, f"stale anchor: `{path}:{line_no}` "
+                        f"(file has {n_lines} lines)")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    paths = argv or ["README.md", "docs"]
+    all_errors: List[str] = []
+    n_files = 0
+    for md in iter_markdown(paths):
+        n_files += 1
+        all_errors.extend(check_file(md))
+    if all_errors:
+        print(f"{len(all_errors)} broken reference(s) "
+              f"in {n_files} file(s):")
+        for e in all_errors:
+            print(f"  {e}")
+        return 1
+    print(f"checked {n_files} markdown file(s): all references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
