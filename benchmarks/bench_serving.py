@@ -1,0 +1,460 @@
+"""Serving benchmark: continuous batching vs static batching under load.
+
+Quantifies the tentpole claim — step-level scheduling over the paged KV
+pool (``serving/engine.py`` + ``serving/server.py``) turns head-of-line
+batch blocking into per-step admission. Both disciplines run the SAME
+model, the SAME governed LogAct machinery (RuleVoter admission rules +
+first-voter decider), and the SAME seeded Poisson arrival sequences; the
+only variable is the scheduling discipline:
+
+* **static** (``ServePlanner``/``serve_batch``): all pending mail becomes
+  one closed-loop generation; a request arriving mid-generation waits for
+  the whole batch to finish before it is even prefillled.
+* **continuous** (``ContinuousServePlanner``/``serve_step``): one intent
+  per single-token decode step; arrivals join at the next step.
+
+An **open-loop** load generator (arrivals don't wait for completions —
+the regime where batch blocking actually hurts) sweeps two rates derived
+from measured capacity: ``low`` (0.25x) and ``sat`` (0.75x of the slower
+discipline's capacity — saturating enough that static's batch boundaries
+dominate its tail latency while neither queue diverges). Per-request
+TTFT is measured log-natively: arrival is stamped at mail append,
+first-token delivery is the wall-clock timestamp (``Entry.realtime_ts``,
+same ``time.time()`` clock) of the Result entry that admitted the
+request (continuous) or carried its batch (static).
+
+A third lane reruns continuous serving on a durable (SQLite) bus under a
+``TrimPolicy``, with ``AgentKernel.maintain`` invoked between request
+waves: it reports the maintain pause (the stop-the-world checkpoint +
+trim + VACUUM) and checks the live log span stays bounded and that a
+steady-state reader (cursor chasing the tail) never sees a
+``TrimmedError``.
+
+Emits ``benchmarks/BENCH_serving.json`` (override via
+``REPRO_BENCH_SERVING_OUT``) with the raw numbers plus the acceptance
+criteria: continuous p99 TTFT >= 2x better than static at the saturating
+rate; bounded log under trim; no trimmed-read errors.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import random
+import statistics
+import tempfile
+import threading
+import time
+from dataclasses import replace
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, smoke
+from repro.core import entries as E
+from repro.core.acl import BusClient
+from repro.core.bus import TrimmedError
+from repro.core.entries import PayloadType
+from repro.core.kernel import AgentKernel, TrimPolicy
+from repro.core.voter import RuleVoter
+from repro.models.model import Model
+from repro.models.params import split_params
+from repro.serving.engine import PagedEngine
+from repro.serving.server import (SERVE_ADMISSION_RULES, ServeEnv,
+                                  build_continuous_serving_agent,
+                                  build_serving_agent, h_serve_batch)
+
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+N_REQ = 12 if QUICK else 32          # open-loop requests per (rate, mode)
+TRIM_REQ = 8 if QUICK else 16        # requests through the trim lane
+MAX_NEW = 16                         # tokens generated per request
+MAX_BATCH = 8                        # lanes / static batch cap
+PAGE = 8                             # KV pool page size (tokens)
+PROMPT_LEN = 8                       # one full page: a single prefill shape
+PAGES_PER_SEQ = -(-(PROMPT_LEN + MAX_NEW) // PAGE)   # = 3
+NUM_PAGES = 1 + MAX_BATCH * PAGES_PER_SEQ + PAGES_PER_SEQ  # null + slack
+WAIT_S = 60.0 if QUICK else 120.0
+
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "BENCH_serving.json")
+
+
+def _serving_config():
+    """Smoke-family config scaled up so a decode step costs real compute
+    (the bus machinery must be overhead, not the workload — on the bare
+    smoke config a step is sub-ms and any scheduler looks the same)."""
+    return replace(smoke(get_config("qwen3_4b")), d_model=512, n_heads=8,
+                   n_kv_heads=4, d_head=64, d_ff=2048, vocab=1024)
+
+
+def _make_params(cfg):
+    values, _ = split_params(Model(cfg, dtype=jnp.float32).init(
+        jax.random.PRNGKey(0)))
+    return values
+
+
+def _governed(agent) -> None:
+    """The measured configuration: admission rules voting on every step,
+    decider gated on the vote (not its commit-by-default mode)."""
+    agent.add_voter(RuleVoter(BusClient(agent.bus, "v-rule", "voter"),
+                              rules=SERVE_ADMISSION_RULES), from_tail=False)
+    agent.set_policy("decider", {"mode": "first_voter"})
+
+
+def _poisson_gaps(n: int, rate: float, seed: int) -> List[float]:
+    rng = random.Random(seed)
+    return [rng.expovariate(rate) for _ in range(n)]
+
+
+def _prompts(n: int, vocab: int, seed: int = 7) -> List[List[int]]:
+    rng = random.Random(seed)
+    return [[rng.randrange(1, vocab) for _ in range(PROMPT_LEN)]
+            for _ in range(n)]
+
+
+def _pct(xs: List[float], q: float) -> float:
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    return s[max(0, math.ceil(q * len(s)) - 1)]
+
+
+def _summary(t_arr: Dict[str, float], t_first: Dict[str, float],
+             t_fin: Dict[str, float],
+             per_tok: List[float]) -> Dict[str, Any]:
+    ttft = [t_first[r] - t_arr[r] for r in t_arr if r in t_first]
+    dur = (max(t_fin.values()) - min(t_arr.values())) if t_fin else 0.0
+    return {"n_requests": len(t_arr), "n_completed": len(t_fin),
+            "duration_s": round(dur, 4),
+            "ttft_p50_ms": round(_pct(ttft, 0.50) * 1e3, 3),
+            "ttft_p99_ms": round(_pct(ttft, 0.99) * 1e3, 3),
+            "per_token_p50_ms": round(_pct(per_tok, 0.50) * 1e3, 3),
+            "per_token_p99_ms": round(_pct(per_tok, 0.99) * 1e3, 3),
+            "tokens_per_s": round(len(t_fin) * MAX_NEW / dur, 1)
+            if dur > 0 else 0.0}
+
+
+def _loadgen(agent, prompts: List[List[int]], gaps: List[float],
+             label: str) -> Dict[str, float]:
+    """Open-loop arrivals: sleep to the schedule regardless of service
+    progress; stamp each arrival with the clock Result timestamps use."""
+    t_arr: Dict[str, float] = {}
+    t_next = time.monotonic()
+    for i, gap in enumerate(gaps):
+        t_next += gap
+        lag = t_next - time.monotonic()
+        if lag > 0:
+            time.sleep(lag)
+        rid = f"{label}-r{i}"
+        t_arr[rid] = time.time()
+        agent.send_mail("req", req_id=rid, prompt_tokens=prompts[i],
+                        max_new_tokens=MAX_NEW)
+    return t_arr
+
+
+def _drain_engine(engine: PagedEngine) -> None:
+    for rid in list(engine.seqs):
+        engine._retire(rid)
+
+
+# ---------------------------------------------------------------------------
+# the two disciplines
+# ---------------------------------------------------------------------------
+
+def run_continuous(cfg, engine: PagedEngine, prompts, gaps,
+                   label: str) -> Dict[str, Any]:
+    agent = build_continuous_serving_agent(
+        cfg, max_batch=MAX_BATCH, num_pages=NUM_PAGES, page_size=PAGE,
+        max_new_tokens=MAX_NEW)
+    agent.executor.env.engine = engine  # shared pre-jitted engine
+    _governed(agent)
+    agent.start()
+    planner = agent.driver.planner
+    try:
+        t_arr = _loadgen(agent, prompts, gaps, label)
+        deadline = time.monotonic() + WAIT_S
+        while time.monotonic() < deadline and \
+                len(planner.outputs) + len(planner.rejected) < len(gaps):
+            time.sleep(0.01)
+    finally:
+        agent.stop()
+        _drain_engine(engine)
+    # TTFT = the admitting step's Result (admit() computes the first
+    # token); completion = the step whose "finished" carries the request.
+    t_first: Dict[str, float] = {}
+    t_fin: Dict[str, float] = {}
+    for e in agent.bus.read(0, types=[PayloadType.RESULT]):
+        b = e.body
+        if not b.get("ok") or b.get("recovered"):
+            continue
+        v = b.get("value") or {}
+        for rid in v.get("admitted", ()):
+            t_first.setdefault(rid, e.realtime_ts)
+        for f in v.get("finished", ()):
+            t_fin[f["req_id"]] = e.realtime_ts
+    per_tok = [(t_fin[r] - t_first[r]) / max(1, MAX_NEW - 1)
+               for r in t_fin if r in t_first]
+    return _summary(t_arr, t_first, t_fin, per_tok)
+
+
+def run_static(cfg, env: ServeEnv, prompts, gaps,
+               label: str) -> Dict[str, Any]:
+    # pad_batch: every batch decodes at the fixed MAX_BATCH shape, like
+    # the paged engine's lanes — one compiled shape, no bsz-dependent
+    # perf cliffs biasing the comparison
+    agent = build_serving_agent(cfg, max_batch=MAX_BATCH,
+                                pad_batch=MAX_BATCH)
+    agent.executor.env = env            # shared pre-jitted static env
+    _governed(agent)
+    agent.start()
+    try:
+        t_arr = _loadgen(agent, prompts, gaps, label)
+        deadline = time.monotonic() + WAIT_S
+        while time.monotonic() < deadline:
+            served = set()
+            for e in agent.bus.read(0, types=[PayloadType.RESULT]):
+                v = e.body.get("value") or {}
+                if e.body.get("ok") and "req_ids" in v:
+                    served.update(v["req_ids"])
+            if len(served) >= len(gaps):
+                break
+            time.sleep(0.01)
+    finally:
+        agent.stop()
+    # every token of a request is delivered when its batch's Result lands;
+    # the batch's service time is Result minus its Intent timestamp
+    intent_ts = {e.body["intent_id"]: e.realtime_ts
+                 for e in agent.bus.read(0, types=[PayloadType.INTENT])}
+    t_first: Dict[str, float] = {}
+    t_fin: Dict[str, float] = {}
+    per_tok: List[float] = []
+    for e in agent.bus.read(0, types=[PayloadType.RESULT]):
+        b = e.body
+        v = b.get("value") or {}
+        if not b.get("ok") or "req_ids" not in v:
+            continue
+        dur = e.realtime_ts - intent_ts.get(b["intent_id"], e.realtime_ts)
+        for rid in v["req_ids"]:
+            t_first[rid] = t_fin[rid] = e.realtime_ts
+            per_tok.append(dur / MAX_NEW)
+    return _summary(t_arr, t_first, t_fin, per_tok)
+
+
+# ---------------------------------------------------------------------------
+# calibration: measured capacity sets the sweep rates
+# ---------------------------------------------------------------------------
+
+def calibrate(cfg, engine: PagedEngine, env: ServeEnv) -> Dict[str, float]:
+    full = {"prompts": [[1] * PROMPT_LEN] * MAX_BATCH,
+            "max_new_tokens": MAX_NEW, "pad_batch": MAX_BATCH}
+    t_gen = math.inf
+    for _ in range(2):
+        t0 = time.monotonic()
+        h_serve_batch(dict(full), env)
+        t_gen = min(t_gen, time.monotonic() - t0)
+    agent = build_continuous_serving_agent(
+        cfg, max_batch=MAX_BATCH, num_pages=NUM_PAGES, page_size=PAGE,
+        max_new_tokens=MAX_NEW)
+    agent.executor.env.engine = engine
+    _governed(agent)
+    n = 2 * MAX_BATCH
+    for i in range(n):
+        agent.send_mail("req", req_id=f"cal-{i}",
+                        prompt_tokens=[1] * PROMPT_LEN,
+                        max_new_tokens=MAX_NEW)
+    t0 = time.monotonic()
+    agent.run_until_idle(max_rounds=100_000)
+    t_cont = time.monotonic() - t0
+    planner = agent.driver.planner
+    assert len(planner.outputs) == n, "calibration run did not drain"
+    _drain_engine(engine)
+    return {"t_gen_static_s": t_gen,
+            "t_step_cont_ms": t_cont / max(1, planner.step) * 1e3,
+            "cap_static_req_s": MAX_BATCH / t_gen,
+            "cap_cont_req_s": n / t_cont}
+
+
+# ---------------------------------------------------------------------------
+# trim lane: long-running serving with a bounded log
+# ---------------------------------------------------------------------------
+
+def run_trim(engine: PagedEngine, prompts, workdir: str) -> Dict[str, Any]:
+    pol = TrimPolicy(checkpoint_every=120, retain_entries=48,
+                     compact=True, keep_snapshots=2)
+    kernel = AgentKernel(workdir=workdir)
+    h = kernel.create_bus("serve", mode="spawn", backend="sqlite",
+                          image="serving-continuous",
+                          image_kw={"max_batch": MAX_BATCH,
+                                    "num_pages": NUM_PAGES,
+                                    "page_size": PAGE,
+                                    "max_new_tokens": MAX_NEW},
+                          threaded=False, trim_policy=pol)
+    h.agent.executor.env.engine = engine  # reuse the pre-jitted engine
+    h.agent.start()
+    bus = h.bus
+    stop = threading.Event()
+    reader_state = {"errors": 0, "entries": 0}
+
+    def reader() -> None:
+        # a steady-state follower: chases the tail, re-anchors at the trim
+        # base if it ever falls behind a trim (it should not need to)
+        cur = bus.trim_base()
+        while not stop.is_set():
+            try:
+                es = bus.read(cur)
+                if es:
+                    cur = es[-1].position + 1
+                    reader_state["entries"] += len(es)
+            except TrimmedError:
+                reader_state["errors"] += 1
+                cur = bus.trim_base()
+            time.sleep(0.005)
+
+    rt = threading.Thread(target=reader, daemon=True)
+    rt.start()
+    client = BusClient(bus, "loadgen", "external")
+    planner = h.agent.driver.planner
+    waves = 4
+    per_wave = max(1, TRIM_REQ // waves)
+    pauses: List[float] = []
+    live_after: List[int] = []
+    max_live = 0
+    n_sent = 0
+    try:
+        for w in range(waves):
+            for i in range(per_wave):
+                client.append(E.mail("req", sender="loadgen",
+                                     req_id=f"trim-w{w}-{i}",
+                                     prompt_tokens=prompts[i % len(prompts)],
+                                     max_new_tokens=MAX_NEW))
+                n_sent += 1
+            deadline = time.monotonic() + WAIT_S
+            while time.monotonic() < deadline and \
+                    len(planner.outputs) < n_sent:
+                max_live = max(max_live, bus.tail() - bus.trim_base())
+                time.sleep(0.02)
+            t0 = time.monotonic()
+            res = kernel.maintain("serve", force=True)
+            pauses.append(time.monotonic() - t0)
+            assert res.get("maintained"), res
+            live_after.append(bus.tail() - bus.trim_base())
+    finally:
+        stop.set()
+        rt.join(timeout=2.0)
+        kernel.shutdown()
+        _drain_engine(engine)
+    return {"n_requests": n_sent, "n_completed": len(planner.outputs),
+            "total_entries": bus.tail(),
+            "trim_base_final": bus.trim_base(),
+            "max_live_entries": max_live,
+            "live_after_maintain": live_after,
+            "maintain_pause_ms": [round(p * 1e3, 1) for p in pauses],
+            "maintain_pause_max_ms": round(max(pauses) * 1e3, 1),
+            "reader_trimmed_errors": reader_state["errors"],
+            "reader_entries_seen": reader_state["entries"],
+            "trim_policy": {"checkpoint_every": pol.checkpoint_every,
+                            "retain_entries": pol.retain_entries}}
+
+
+# ---------------------------------------------------------------------------
+
+def main(rows: List[str]) -> None:
+    report: Dict[str, Any] = {
+        "generated_by": "benchmarks/bench_serving.py", "quick": QUICK,
+        "n_requests": N_REQ, "max_new_tokens": MAX_NEW,
+        "max_batch": MAX_BATCH, "page_size": PAGE, "num_pages": NUM_PAGES,
+        "prompt_len": PROMPT_LEN}
+    cfg = _serving_config()
+    params = _make_params(cfg)
+    engine = PagedEngine(cfg, max_batch=MAX_BATCH, num_pages=NUM_PAGES,
+                         page_size=PAGE, params=params,
+                         max_pages_per_seq=PAGES_PER_SEQ)
+    engine.admit("warm", [1] * PROMPT_LEN, 2)   # compile prefill + decode
+    while engine.n_inflight:
+        engine.step()
+    env_static = ServeEnv(model=Model(cfg, dtype=jnp.float32),
+                          params=params, max_new_tokens=MAX_NEW)
+    # one compiled shape thanks to pad_batch; warm with the run's real
+    # max_new_tokens (cache length is part of the decode shape)
+    h_serve_batch({"prompts": [[1] * PROMPT_LEN], "max_new_tokens": MAX_NEW,
+                   "pad_batch": MAX_BATCH}, env_static)
+
+    calib = calibrate(cfg, engine, env_static)
+    report["calibration"] = {k: round(v, 4) for k, v in calib.items()}
+    cap = min(calib["cap_static_req_s"], calib["cap_cont_req_s"])
+    rates = {"low": 0.25 * cap, "sat": 0.75 * cap}
+    prompts = _prompts(N_REQ, cfg.vocab)
+
+    sweep: Dict[str, Any] = {}
+    for i, (rname, rate) in enumerate(sorted(rates.items())):
+        gaps = _poisson_gaps(N_REQ, rate, seed=11 + i)
+        cont = run_continuous(cfg, engine, prompts, gaps, f"c{rname}")
+        stat = run_static(cfg, env_static, prompts, gaps, f"s{rname}")
+        sweep[rname] = {"rate_req_s": round(rate, 3),
+                        "continuous": cont, "static": stat}
+        for mode, m in (("continuous", cont), ("static", stat)):
+            rows.append(
+                f"serving.{rname}.{mode}.ttft_p99,"
+                f"{m['ttft_p99_ms'] * 1e3:.0f},"
+                f"p50_us={m['ttft_p50_ms'] * 1e3:.0f};"
+                f"tok_s={m['tokens_per_s']};"
+                f"completed={m['n_completed']}/{m['n_requests']}")
+    report["sweep"] = sweep
+
+    with tempfile.TemporaryDirectory() as wd:
+        trim = run_trim(engine, prompts, wd)
+    report["trim"] = trim
+    rows.append(f"serving.trim.maintain_pause,"
+                f"{trim['maintain_pause_max_ms'] * 1e3:.0f},"
+                f"max_live={trim['max_live_entries']};"
+                f"live_after={max(trim['live_after_maintain'])};"
+                f"trimmed_errors={trim['reader_trimmed_errors']}")
+
+    sat = sweep["sat"]
+    ratio = sat["static"]["ttft_p99_ms"] / \
+        max(sat["continuous"]["ttft_p99_ms"], 1e-9)
+    rows.append(f"serving.sat.ttft_p99_static_over_continuous,"
+                f"{ratio:.2f},criterion=>=2x")
+    report["ttft_p99_ratio_static_over_continuous_at_sat"] = round(ratio, 2)
+    live_bound = (trim["trim_policy"]["retain_entries"]
+                  + trim["trim_policy"]["checkpoint_every"] + 128)
+    all_served = all(
+        sweep[r][m]["n_completed"] == sweep[r][m]["n_requests"]
+        for r in sweep for m in ("continuous", "static")) and \
+        trim["n_completed"] == trim["n_requests"]
+    report["criteria"] = {
+        "continuous_p99_ttft_2x_better_at_sat": ratio >= 2.0,
+        "all_requests_served": all_served,
+        "log_bounded_under_trim": (trim["trim_base_final"] > 0 and
+                                   max(trim["live_after_maintain"])
+                                   <= live_bound),
+        "no_trimmed_errors": trim["reader_trimmed_errors"] == 0}
+
+    out_path = os.environ.get("REPRO_BENCH_SERVING_OUT", DEFAULT_OUT)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"capacity: static {calib['cap_static_req_s']:.1f} req/s, "
+          f"continuous {calib['cap_cont_req_s']:.1f} req/s "
+          f"(t_gen {calib['t_gen_static_s'] * 1e3:.0f}ms, "
+          f"step {calib['t_step_cont_ms']:.1f}ms)")
+    for rname, s in sweep.items():
+        print(f"{rname} ({s['rate_req_s']} req/s): "
+              f"p99 TTFT continuous {s['continuous']['ttft_p99_ms']:.0f}ms"
+              f" vs static {s['static']['ttft_p99_ms']:.0f}ms; tok/s "
+              f"{s['continuous']['tokens_per_s']} vs "
+              f"{s['static']['tokens_per_s']}")
+    print(f"sat p99 TTFT ratio static/continuous: {ratio:.2f}x")
+    print(f"trim: max pause {trim['maintain_pause_max_ms']}ms, live span "
+          f"{max(trim['live_after_maintain'])} entries after maintain "
+          f"(bound {live_bound}), {trim['reader_trimmed_errors']} "
+          f"trimmed-read errors")
+    print(f"wrote {out_path}")
+    if not all(report["criteria"].values()):
+        raise AssertionError(
+            f"acceptance criteria failed: {report['criteria']}")
+
+
+if __name__ == "__main__":
+    main([])

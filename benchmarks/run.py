@@ -4,6 +4,9 @@
                           filtered reads) across backends
   bench_netbus    -> NetBus push-wake latency / idle CPU vs polling /
                      wire throughput (emits BENCH_netbus.json)
+  bench_serving   -> continuous vs static batching under open-loop Poisson
+                     load: TTFT / per-token latency / tokens/s, plus the
+                     trim-policy lane (emits BENCH_serving.json)
   bench_overhead  -> Fig 5 (LogAct overhead: stages, log bytes, backends)
   bench_voters    -> Fig 6 (Utility/ASR/latency/tokens per defense)
   bench_hotswap   -> Fig 7 (hot-swapping voters via policy entries)
@@ -25,7 +28,7 @@ import time
 import traceback
 
 #: benches exercised by the --quick CI smoke (hermetic, seconds not minutes)
-QUICK = ("bus_throughput", "netbus", "hotswap", "recovery")
+QUICK = ("bus_throughput", "netbus", "hotswap", "recovery", "serving")
 
 
 def main(argv=None) -> None:
@@ -42,10 +45,11 @@ def main(argv=None) -> None:
 
     from . import (bench_bus_throughput, bench_hotswap, bench_netbus,
                    bench_overhead, bench_recovery, bench_roofline,
-                   bench_swarm, bench_voters)
+                   bench_serving, bench_swarm, bench_voters)
     benches = [
         ("bus_throughput", bench_bus_throughput.main),
         ("netbus", bench_netbus.main),
+        ("serving", bench_serving.main),
         ("overhead", bench_overhead.main),
         ("voters", bench_voters.main),
         ("hotswap", bench_hotswap.main),
