@@ -7,23 +7,42 @@ file, "compile" it, run it) under LogAct. We report:
   (Bottom) cumulative stage latency across bus backends
            (memory / sqlite / kv / kv+geo-latency) x decider policies
            (on_by_default / first_voter)
+  (Trim)   the same workload as a long-running loop under a kernel
+           ``TrimPolicy``: ``maintain`` between request waves keeps the
+           live log span bounded while a tail-chasing reader sees zero
+           ``TrimmedError``s; the maintain pause is recorded.
+
+Emits ``benchmarks/BENCH_overhead.json`` (override via
+``REPRO_BENCH_OVERHEAD_OUT``) with the raw numbers plus acceptance
+checks: control-plane (vote+decide) time below inference time, all trim
+lane tasks completed, bounded live span, zero trimmed reads.
 """
 from __future__ import annotations
 
+import json
 import os
 import tempfile
+import threading
 import time
 from typing import Any, Dict, List
 
 from repro.core import entries as E
 from repro.core.acl import BusClient
 from repro.core.agent import LogActAgent
-from repro.core.bus import make_bus
+from repro.core.bus import TrimmedError, make_bus
 from repro.core.driver import Planner
 from repro.core.introspect import summarize_bus
+from repro.core.kernel import AgentKernel, TrimPolicy, register_image
 from repro.core.voter import RuleVoter, STANDARD_RULES
 
 SYSTEM_PROMPT = "x" * 70_000  # the paper's 70KB AnonHarness system prompt
+
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+TRIM_WAVES = 2 if QUICK else 4
+TRIM_PER_WAVE = 3 if QUICK else 6
+TRIM_WAIT_S = 30.0
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "BENCH_overhead.json")
 
 
 class HelloWorldPlanner(Planner):
@@ -69,6 +88,128 @@ def handlers(workdir: str):
     return {"write_file": write_file, "compile": compile_, "run": run}
 
 
+class WaveHelloPlanner(Planner):
+    """Hello-world cycles under steady mail load: each loadgen mail queues
+    one write -> compile -> run cycle (new instructions wake a finished
+    driver), so the log grows indefinitely — the trim lane's workload."""
+
+    def __init__(self) -> None:
+        self.queue = 0
+        self.stage = 3  # 3 = between cycles
+        self.cycle = 0
+
+    def propose(self, context: Dict[str, Any]) -> Dict[str, Any]:
+        self.queue += sum(1 for m in context.get("mail", [])
+                          if m.get("req_id"))
+        if self.stage >= 3:
+            if not self.queue:
+                return {"done": True, "note": "drained"}
+            self.queue -= 1
+            self.stage = 0
+            self.cycle += 1
+        name = f"hello-{self.cycle}.c"
+        plans = [
+            {"intent": {"kind": "write_file",
+                        "args": {"name": name,
+                                 "source": '#include <stdio.h>\n'
+                                           'int main(){puts("hi");}'}}},
+            {"intent": {"kind": "compile", "args": {"name": name}}},
+            {"intent": {"kind": "run",
+                        "args": {"name": name.replace(".c", "")}}},
+        ]
+        p = plans[self.stage]
+        self.stage += 1
+        return p
+
+
+@register_image("overhead-hello-wave")
+def _image_hello_wave(bus=None, snapshot_store=None, workdir=None,
+                      counters=None, **kw) -> LogActAgent:
+    hs = handlers(workdir)
+    base_run = hs["run"]
+
+    def run_counted(args, env):
+        r = base_run(args, env)
+        counters["runs"] += 1
+        return r
+
+    hs["run"] = run_counted
+    return LogActAgent(bus=bus, planner=WaveHelloPlanner(), env=None,
+                       handlers=hs, snapshot_store=snapshot_store,
+                       agent_id="hello")
+
+
+def run_trim(workdir: str) -> Dict[str, Any]:
+    """The hello-world loop as a long-running service with a bounded log:
+    waves of loadgen mail, ``kernel.maintain`` (checkpoint + trim +
+    compact) between waves, a tail-chasing reader that must never hit
+    ``TrimmedError``."""
+    pol = TrimPolicy(checkpoint_every=150, retain_entries=64,
+                     compact=True, keep_snapshots=2)
+    counters = {"runs": 0}
+    kernel = AgentKernel(workdir=os.path.join(workdir, "trim-kernel"))
+    h = kernel.create_bus("hello", mode="spawn", backend="sqlite",
+                          image="overhead-hello-wave",
+                          image_kw={"workdir": workdir,
+                                    "counters": counters},
+                          voters=["rule"], trim_policy=pol)
+    h.agent.set_policy("decider", {"mode": "first_voter"})
+    bus = h.bus
+    stop = threading.Event()
+    reader_state = {"errors": 0, "entries": 0}
+
+    def reader() -> None:
+        cur = bus.trim_base()
+        while not stop.is_set():
+            try:
+                es = bus.read(cur)
+                if es:
+                    cur = es[-1].position + 1
+                    reader_state["entries"] += len(es)
+            except TrimmedError:
+                reader_state["errors"] += 1
+                cur = bus.trim_base()
+            time.sleep(0.002)
+
+    rt = threading.Thread(target=reader, daemon=True)
+    rt.start()
+    client = BusClient(bus, "loadgen", "external")
+    pauses: List[float] = []
+    live_after: List[int] = []
+    max_live = 0
+    n_sent = 0
+    try:
+        for w in range(TRIM_WAVES):
+            for i in range(TRIM_PER_WAVE):
+                client.append(E.mail("req", sender="loadgen",
+                                     req_id=f"trim-w{w}-{i}"))
+                n_sent += 1
+            deadline = time.monotonic() + TRIM_WAIT_S
+            while time.monotonic() < deadline and counters["runs"] < n_sent:
+                h.agent.tick()
+                max_live = max(max_live, bus.tail() - bus.trim_base())
+            t0 = time.monotonic()
+            res = kernel.maintain("hello", force=True)
+            pauses.append(time.monotonic() - t0)
+            assert res.get("maintained"), res
+            live_after.append(bus.tail() - bus.trim_base())
+    finally:
+        stop.set()
+        rt.join(timeout=2.0)
+        kernel.shutdown()
+    return {"n_requests": n_sent, "n_completed": counters["runs"],
+            "total_entries": bus.tail(),
+            "trim_base_final": bus.trim_base(),
+            "max_live_entries": max_live,
+            "live_after_maintain": live_after,
+            "maintain_pause_ms": [round(p * 1e3, 1) for p in pauses],
+            "maintain_pause_max_ms": round(max(pauses) * 1e3, 1),
+            "reader_trimmed_errors": reader_state["errors"],
+            "reader_entries_seen": reader_state["entries"],
+            "trim_policy": {"checkpoint_every": pol.checkpoint_every,
+                            "retain_entries": pol.retain_entries}}
+
+
 def run_once(backend: str, policy: str, workdir: str,
              latency_s: float = 0.0) -> Dict[str, Any]:
     kw = {}
@@ -111,6 +252,8 @@ def run_once(backend: str, policy: str, workdir: str,
 
 
 def main(rows: List[str]) -> None:
+    report: Dict[str, Any] = {
+        "generated_by": "benchmarks/bench_overhead.py", "quick": QUICK}
     with tempfile.TemporaryDirectory() as d:
         base = run_once("memory", "first_voter", d)
         print("\n# Fig5(Top): per-stage time (memory bus, first_voter)")
@@ -122,16 +265,61 @@ def main(rows: List[str]) -> None:
               f"= {base['bytes_per_s']/1e3:.2f} KB/s; entries={base['entries']}")
         rows.append(f"overhead.log_bytes,{base['log_bytes']},KB_total")
         rows.append(f"overhead.log_rate,{base['bytes_per_s']:.0f},bytes_per_s")
+        report["stages"] = {k: base[k] for k in
+                            ("inferring_s", "voting_s", "deciding_s",
+                             "executing_s", "wall_s")}
+        report["log"] = {"bytes": base["log_bytes"],
+                         "bytes_per_s": round(base["bytes_per_s"], 1),
+                         "entries": base["entries"],
+                         "bytes_by_type": base["bytes_by_type"]}
         print("\n# Fig5(Bottom): backends x policies (cumulative stage s)")
         print(f"  {'backend':8s} {'policy':14s} {'wall':>8s} {'vote+decide':>12s}")
+        matrix: Dict[str, Any] = {}
         for backend in ("memory", "sqlite", "kv", "kv_geo"):
             for policy in ("on_by_default", "first_voter"):
                 r = run_once(backend, policy, d)
                 vd = r["voting_s"] + r["deciding_s"]
+                matrix[f"{backend}.{policy}"] = {
+                    "wall_s": round(r["wall_s"], 4),
+                    "vote_decide_s": round(vd, 4)}
                 print(f"  {backend:8s} {policy:14s} {r['wall_s']:8.3f} {vd:12.3f}")
                 rows.append(
                     f"overhead.{backend}.{policy},{r['wall_s']*1e6:.0f},"
                     f"vote_decide_us={vd*1e6:.0f}")
+        report["matrix"] = matrix
+
+        trim = run_trim(d)
+    report["trim"] = trim
+    print(f"\n# trim lane: {trim['n_completed']}/{trim['n_requests']} tasks, "
+          f"max pause {trim['maintain_pause_max_ms']}ms, live span "
+          f"{max(trim['live_after_maintain'])} after maintain, "
+          f"{trim['reader_trimmed_errors']} trimmed-read errors")
+    rows.append(f"overhead.trim.maintain_pause,"
+                f"{trim['maintain_pause_max_ms'] * 1e3:.0f},"
+                f"max_live={trim['max_live_entries']};"
+                f"live_after={max(trim['live_after_maintain'])};"
+                f"trimmed_errors={trim['reader_trimmed_errors']}")
+
+    live_bound = (trim["trim_policy"]["retain_entries"]
+                  + trim["trim_policy"]["checkpoint_every"] + 128)
+    report["criteria"] = {
+        "control_plane_below_inference":
+            (report["stages"]["voting_s"] + report["stages"]["deciding_s"])
+            < report["stages"]["inferring_s"],
+        "all_trim_tasks_completed":
+            trim["n_completed"] == trim["n_requests"],
+        "log_bounded_under_trim": (trim["trim_base_final"] > 0 and
+                                   max(trim["live_after_maintain"])
+                                   <= live_bound),
+        "no_trimmed_errors": trim["reader_trimmed_errors"] == 0}
+    out_path = os.environ.get("REPRO_BENCH_OVERHEAD_OUT", DEFAULT_OUT)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    if not all(report["criteria"].values()):
+        raise AssertionError(
+            f"acceptance criteria failed: {report['criteria']}")
 
 
 if __name__ == "__main__":

@@ -14,21 +14,38 @@ own bus) — exactly the paper's setting. Two configs:
 
 Measured over a FIXED tick budget: unique units fixed (work) and planner
 tokens consumed. Paper: +17% work, -41% tokens.
+
+A third lane reruns the supervisor config under a kernel ``TrimPolicy``:
+``maintain_all`` between waves checkpoints every worker component (the
+supervisor checkpoints its per-worker observers too, so its cursors are
+protected), trims and compacts each bus, while tail-chasing readers on
+every worker bus must see zero ``TrimmedError``s. Emits
+``benchmarks/BENCH_swarm.json`` (override via ``REPRO_BENCH_SWARM_OUT``).
 """
 from __future__ import annotations
 
 import hashlib
+import json
+import os
+import threading
+import time
 from typing import Any, Dict, List
 
 from repro.core.agent import LogActAgent
-from repro.core.bus import MemoryBus
+from repro.core.bus import MemoryBus, TrimmedError
 from repro.core.driver import Planner
+from repro.core.kernel import AgentKernel, TrimPolicy, register_image
 from repro.core.supervisor import Supervisor
 
 N_WORKERS = 6
 N_UNITS = 2400
 RANGE = 4
 TICKS = 150
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+TRIM_TICKS = 45 if QUICK else 120
+TRIM_WAVES = 4
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "BENCH_swarm.json")
 FIX_COST_FIRST = 3   # worker 0 finds the fix quickly...
 FIX_COST_REST = 30   # ...the rest would grind for a long time solo
 ERROR_LOG = ("Traceback: ModuleNotFoundError: no module named 'repro'; "
@@ -123,6 +140,94 @@ def run_swarm(with_supervisor: bool) -> Dict[str, Any]:
             "supervisor_mail": sup.mail_sent if sup else 0}
 
 
+@register_image("swarm-worker")
+def _image_swarm_worker(bus=None, snapshot_store=None, wid=0,
+                        handlers=None, **kw) -> LogActAgent:
+    return LogActAgent(bus=bus, planner=SwarmWorker(wid), env=None,
+                       handlers=handlers, snapshot_store=snapshot_store,
+                       agent_id=f"w{wid}")
+
+
+def run_swarm_trim() -> Dict[str, Any]:
+    """The supervisor config as a long-running fleet with bounded logs:
+    kernel-managed worker buses under a ``TrimPolicy``, ``maintain_all``
+    between waves, the supervisor checkpointing its observers so trims
+    never cut its cursors out from under it, and a tail-chasing reader
+    per worker bus asserting zero ``TrimmedError``s."""
+    pol = TrimPolicy(checkpoint_every=100, retain_entries=48,
+                     compact=True, keep_snapshots=2)
+    shared_done: set = set()
+    counters = {"explore_intents": 0, "redundant_units": 0}
+    hs = make_handlers(shared_done, counters)
+    kernel = AgentKernel()
+    handles = [kernel.create_bus(f"w{i}", mode="spawn", backend="memory",
+                                 image="swarm-worker",
+                                 image_kw={"wid": i, "handlers": hs},
+                                 trim_policy=pol)
+               for i in range(N_WORKERS)]
+    buses = {f"w{i}": h.bus for i, h in enumerate(handles)}
+    sup = Supervisor(buses)
+    sup_store = kernel.snapshot_store()
+    stop = threading.Event()
+    reader_state = {"errors": 0, "entries": 0}
+
+    def reader(bus) -> None:
+        cur = bus.trim_base()
+        while not stop.is_set():
+            try:
+                es = bus.read(cur)
+                if es:
+                    cur = es[-1].position + 1
+                    reader_state["entries"] += len(es)
+            except TrimmedError:
+                reader_state["errors"] += 1
+                cur = bus.trim_base()
+            time.sleep(0.002)
+
+    readers = [threading.Thread(target=reader, args=(h.bus,), daemon=True)
+               for h in handles]
+    for rt in readers:
+        rt.start()
+    for h in handles:
+        h.agent.send_mail("add type annotations to the codebase")
+    wave_every = max(1, TRIM_TICKS // TRIM_WAVES)
+    pauses: List[float] = []
+    live_after: List[int] = []
+    max_live = 0
+    try:
+        for tick in range(TRIM_TICKS):
+            for h in handles:
+                h.agent.tick()
+            max_live = max(max_live, max(h.bus.tail() - h.bus.trim_base()
+                                         for h in handles))
+            if tick % 3 == 2:
+                sup.sweep()
+            if tick % wave_every == wave_every - 1:
+                sup.checkpoint(sup_store)  # protect the observer cursors
+                t0 = time.monotonic()
+                res = kernel.maintain_all(force=True)
+                pauses.append(time.monotonic() - t0)
+                assert all(r.get("maintained") for r in res.values()), res
+                live_after.append(max(h.bus.tail() - h.bus.trim_base()
+                                      for h in handles))
+    finally:
+        stop.set()
+        for rt in readers:
+            rt.join(timeout=2.0)
+        kernel.shutdown()
+    return {"work": len(shared_done),
+            "ticks": TRIM_TICKS,
+            "trim_base_min": min(h.bus.trim_base() for h in handles),
+            "max_live_entries": max_live,
+            "live_after_maintain": live_after,
+            "maintain_pause_ms": [round(p * 1e3, 1) for p in pauses],
+            "maintain_pause_max_ms": round(max(pauses) * 1e3, 1),
+            "reader_trimmed_errors": reader_state["errors"],
+            "reader_entries_seen": reader_state["entries"],
+            "trim_policy": {"checkpoint_every": pol.checkpoint_every,
+                            "retain_entries": pol.retain_entries}}
+
+
 def main(rows: List[str]) -> None:
     print("\n# Fig9: swarm with/without introspecting Supervisor "
           f"({N_WORKERS} workers, {TICKS} ticks, {N_UNITS} units)")
@@ -144,6 +249,42 @@ def main(rows: List[str]) -> None:
     rows.append(f"swarm.base,0,work={base['work']}_tokens={base['tokens']}")
     rows.append(f"swarm.supervisor,0,work={sup['work']}_tokens={sup['tokens']}"
                 f"_dwork={dw:+.0f}%_dtokens={-dt:.0f}%")
+
+    trim = run_swarm_trim()
+    print(f"\n# trim lane ({N_WORKERS} kernel-managed buses, "
+          f"{trim['ticks']} ticks): work={trim['work']}, max pause "
+          f"{trim['maintain_pause_max_ms']}ms, live span "
+          f"{max(trim['live_after_maintain'])} after maintain, "
+          f"{trim['reader_trimmed_errors']} trimmed-read errors")
+    rows.append(f"swarm.trim.maintain_pause,"
+                f"{trim['maintain_pause_max_ms'] * 1e3:.0f},"
+                f"max_live={trim['max_live_entries']};"
+                f"live_after={max(trim['live_after_maintain'])};"
+                f"trimmed_errors={trim['reader_trimmed_errors']}")
+
+    live_bound = (trim["trim_policy"]["retain_entries"]
+                  + trim["trim_policy"]["checkpoint_every"] + 128)
+    report = {
+        "generated_by": "benchmarks/bench_swarm.py", "quick": QUICK,
+        "n_workers": N_WORKERS, "n_units": N_UNITS, "ticks": TICKS,
+        "base": base, "supervisor": sup,
+        "delta_work_pct": round(dw, 1), "delta_tokens_pct": round(-dt, 1),
+        "trim": trim,
+        "criteria": {
+            "supervisor_more_work": sup["work"] > base["work"],
+            "supervisor_fewer_tokens": sup["tokens"] < base["tokens"],
+            "log_bounded_under_trim": (trim["trim_base_min"] > 0 and
+                                       max(trim["live_after_maintain"])
+                                       <= live_bound),
+            "no_trimmed_errors": trim["reader_trimmed_errors"] == 0}}
+    out_path = os.environ.get("REPRO_BENCH_SWARM_OUT", DEFAULT_OUT)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    if not all(report["criteria"].values()):
+        raise AssertionError(
+            f"acceptance criteria failed: {report['criteria']}")
 
 
 if __name__ == "__main__":

@@ -64,14 +64,23 @@ Three backends (paper §4.1):
                       node. Appends use a cached tail + explicit-position
                       ``INSERT`` (no ``MAX(position)`` subquery per append);
                       cross-process races are resolved by retrying on the
-                      primary-key conflict. Decoded entries are cached per
-                      bus instance (position -> Entry), so JSON is parsed
-                      once per process, not once per component per step.
+                      primary-key conflict. Concurrent ``append_many``
+                      calls **group-commit**: they coalesce into a single
+                      transaction/fsync (leader/follower queue; positions
+                      still assigned in arrival order). Payload bodies are
+                      stored as compact binary blobs (``core.codec``) and
+                      decoded lazily; decoded entries are cached per bus
+                      instance (position -> Entry), so a body is parsed at
+                      most once per process, not once per component per
+                      step.
 * ``KvBus``         — *segmented* log over a file-per-key store, emulating
                       a remote disaggregated KV store (the paper's
                       DynamoDB / "AnonDB" variant). Entries are grouped
                       into immutable multi-entry segment objects
-                      (``seg-<start>.json``, one per ``append_many`` batch);
+                      (``seg-<start>.bin`` of binary entry frames, one per
+                      ``append_many`` batch) served from ``mmap`` with
+                      lazy body decode — an entry a reader never touches
+                      is zero-copy;
                       a cached segment index (refreshed by one LIST) makes
                       ``tail()`` O(1) amortized instead of a file-existence
                       probe per position, and ``read`` one GET per segment
@@ -101,6 +110,7 @@ from __future__ import annotations
 
 import bisect
 import json
+import mmap
 import os
 import sqlite3
 import threading
@@ -109,6 +119,7 @@ import uuid
 from collections import OrderedDict
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from . import codec
 from .entries import ALL_TYPES, Entry, Payload, PayloadType, _json_default
 
 #: Adaptive wait bounds for the durable backends' poll loops.
@@ -344,6 +355,18 @@ class MemoryBus(AgentBus):
 # SQLite backend
 # ---------------------------------------------------------------------------
 
+class _PendingBatch:
+    """One ``append_many`` call parked in the group-commit queue."""
+
+    __slots__ = ("payloads", "event", "positions", "error")
+
+    def __init__(self, payloads: Sequence[Payload]) -> None:
+        self.payloads = payloads
+        self.event = threading.Event()
+        self.positions: Optional[List[int]] = None
+        self.error: Optional[BaseException] = None
+
+
 class SqliteBus(AgentBus):
     """Durable bus: one row per entry. Safe for multi-thread/multi-process use
     (WAL journal mode; position assignment is transactional).
@@ -351,20 +374,57 @@ class SqliteBus(AgentBus):
     Appends keep a cached tail so position assignment is a plain ``INSERT``
     of explicit positions (no ``MAX(position)`` subquery); a concurrent
     appender in another process surfaces as a primary-key conflict, which
-    refreshes the cached tail and retries. ``append_many`` writes the whole
-    batch in a single transaction. Decoded entries are cached per instance
-    so repeated reads of the same positions skip JSON parsing.
+    refreshes the cached tail and retries.
+
+    **Group commit** (``group_commit=True``): concurrent ``append_many``
+    calls coalesce into one transaction. The first arriver becomes the
+    *leader*: it drains the queue (its own batch plus everything that
+    arrived meanwhile), commits the whole group in a single transaction,
+    assigns each batch its contiguous position slice in queue-arrival
+    order (linearizability is unchanged — the queue is FIFO and drains
+    under one lock), signals the waiters, and loops until the queue is
+    empty. A lone writer is its own leader with an empty queue, so the
+    single-writer path costs exactly one transaction per batch — no added
+    latency. ``group_window_s > 0`` additionally has the leader linger
+    that long collecting stragglers before committing (trades append
+    latency for fewer fsyncs under bursty concurrency; default 0 because
+    the piggyback coalescing already wins whenever commits overlap).
+    ``gc_commits``/``gc_batches`` count transactions vs batches so tests
+    and the contention bench can audit the coalescing ratio.
+
+    **Storage format**: payload bodies are stored as compact binary blobs
+    (``codec.payload_blob``: one codec byte + msgpack-or-JSON body; the
+    type lives in its own indexed column) and decoded **lazily** — ``read``
+    returns ``LazyEntry`` whose body stays raw bytes until first access.
+    Legacy rows holding JSON text decode through ``Payload.from_json``
+    unchanged (SQLite type affinity keeps TEXT and BLOB values apart in
+    the same column), and ``LOGACT_CODEC=json`` forces new rows back to
+    the legacy text format. Decoded entries are cached per instance so a
+    body is parsed at most once per process, not once per component per
+    step.
     """
 
     _CACHE_MAX = 65536
 
-    def __init__(self, path: str) -> None:
+    def __init__(self, path: str, group_commit: bool = True,
+                 group_window_s: float = 0.0,
+                 synchronous: str = "NORMAL") -> None:
+        if synchronous.upper() not in ("OFF", "NORMAL", "FULL", "EXTRA"):
+            raise ValueError(f"bad synchronous mode: {synchronous!r}")
+        self._synchronous = synchronous.upper()
         self._path = path
         self._local = threading.local()
         self._append_lock = threading.Lock()
         self._cached_tail: Optional[int] = None  # next position to assign
         self._decode_cache: Dict[int, Entry] = {}
         self._cache_lock = threading.Lock()
+        self._group_commit = group_commit
+        self._gc_window = group_window_s
+        self._gc_lock = threading.Lock()
+        self._gc_queue: List[_PendingBatch] = []
+        self._gc_leader = False
+        self.gc_commits = 0  # transactions committed
+        self.gc_batches = 0  # append_many batches those transactions carried
         conn = self._conn()
         conn.execute("PRAGMA journal_mode=WAL")  # persistent, set once
         conn.execute(
@@ -389,17 +449,82 @@ class SqliteBus(AgentBus):
             # WAL + NORMAL is the standard throughput pairing: commits no
             # longer fsync the WAL on every transaction (the WAL is synced
             # at checkpoint), yet the database cannot be corrupted by a
-            # crash. synchronous is per-connection, so set it here — every
+            # crash. FULL fsyncs every commit — there group commit earns
+            # its keep, one fsync covering every coalesced batch.
+            # synchronous is per-connection, so set it here — every
             # thread gets its own connection.
-            conn.execute("PRAGMA synchronous=NORMAL")
+            conn.execute(f"PRAGMA synchronous={self._synchronous}")
             self._local.conn = conn
         return conn
+
+    @staticmethod
+    def _encode_payload(p: Payload) -> "str | bytes":
+        if codec.legacy_json_mode():
+            return p.to_json()
+        return codec.payload_blob(p)
 
     def append_many(self, payloads: Sequence[Payload]) -> List[int]:
         if not payloads:
             return []
+        if not self._group_commit:
+            pb = _PendingBatch(list(payloads))
+            self._commit_group([pb])
+            if pb.error is not None:
+                raise pb.error
+            return pb.positions
+        pb = _PendingBatch(list(payloads))
+        with self._gc_lock:
+            self._gc_queue.append(pb)
+            lead = not self._gc_leader
+            if lead:
+                self._gc_leader = True
+        if lead:
+            self._lead_group_commits()
+        pb.event.wait()
+        if pb.error is not None:
+            raise pb.error
+        return pb.positions
+
+    def _lead_group_commits(self) -> None:
+        """Group-commit leader loop: drain the queue, commit the group as
+        one transaction, repeat until the queue is empty. Batches that
+        arrive while a commit is in flight are picked up by the next lap —
+        that overlap IS the coalescing."""
+        while True:
+            with self._gc_lock:
+                group = self._gc_queue
+                self._gc_queue = []
+                if not group:
+                    self._gc_leader = False
+                    return
+            if self._gc_window > 0:
+                time.sleep(self._gc_window)  # linger for stragglers
+                with self._gc_lock:
+                    group.extend(self._gc_queue)
+                    self._gc_queue = []
+            try:
+                self._commit_group(group)
+            except BaseException as exc:  # pragma: no cover - defensive
+                for pb in group:
+                    if not pb.event.is_set():
+                        pb.error = exc
+                        pb.event.set()
+
+    def _commit_group(self, group: List[_PendingBatch]) -> None:
         conn = self._conn()
         ts = time.time()
+        # Encode up front so a bad payload fails only its own batch, not
+        # the strangers coalesced with it.
+        encoded: List[Tuple[_PendingBatch, List[Tuple[str, object]]]] = []
+        for pb in group:
+            try:
+                encoded.append((pb, [(p.type.value, self._encode_payload(p))
+                                     for p in pb.payloads]))
+            except BaseException as exc:
+                pb.error = exc
+                pb.event.set()
+        if not encoded:
+            return
         with self._append_lock:
             while True:
                 if self._cached_tail is None:
@@ -408,11 +533,16 @@ class SqliteBus(AgentBus):
                     ).fetchone()
                     # a fully trimmed (empty) log resumes at the base
                     self._cached_tail = max(int(row[0]), self.trim_base())
-                base = self._cached_tail
-                rows = [(base + i, ts, p.type.value, p.to_json())
-                        for i, p in enumerate(payloads)]
+                pos = self._cached_tail
+                rows: List[Tuple[int, float, str, object]] = []
+                slices: List[Tuple[_PendingBatch, int]] = []
+                for pb, items in encoded:
+                    slices.append((pb, pos))
+                    for tval, blob in items:
+                        rows.append((pos, ts, tval, blob))
+                        pos += 1
                 try:
-                    with conn:  # one transaction per batch
+                    with conn:  # ONE transaction for the whole group
                         conn.executemany(
                             "INSERT INTO log(position, realtime_ts, type, "
                             "payload) VALUES (?, ?, ?, ?)", rows)
@@ -420,15 +550,26 @@ class SqliteBus(AgentBus):
                     # Another process appended since we cached the tail.
                     self._cached_tail = None
                     continue
-                self._cached_tail = base + len(payloads)
-                return [r[0] for r in rows]
+                self._cached_tail = pos
+                self.gc_commits += 1
+                self.gc_batches += len(encoded)
+                for pb, first in slices:
+                    pb.positions = list(range(first,
+                                              first + len(pb.payloads)))
+                    pb.event.set()
+                return
 
-    def _decode(self, pos: int, ts: float, payload_json: str) -> Entry:
+    def _decode(self, pos: int, ts: float, type_val: str,
+                payload: "str | bytes") -> Entry:
         with self._cache_lock:
             e = self._decode_cache.get(pos)
             if e is not None:
                 return e
-        e = Entry(pos, ts, Payload.from_json(payload_json))
+        if isinstance(payload, bytes):
+            e = codec.LazyEntry(pos, ts, codec.payload_from_blob(
+                PayloadType.parse(type_val), payload))
+        else:  # legacy JSON text row
+            e = Entry(pos, ts, Payload.from_json(payload))
         with self._cache_lock:
             if len(self._decode_cache) >= self._CACHE_MAX:
                 self._decode_cache.clear()  # simple epoch eviction
@@ -441,7 +582,7 @@ class SqliteBus(AgentBus):
             raise TrimmedError(start, self._trim_base)
         conn = self._conn()
         fs = _parse_types(types)
-        sql = ("SELECT position, realtime_ts, payload FROM log "
+        sql = ("SELECT position, realtime_ts, type, payload FROM log "
                "WHERE position >= ?")
         params: List[object] = [start]
         if end is not None:
@@ -452,7 +593,7 @@ class SqliteBus(AgentBus):
             params.extend(sorted(t.value for t in fs))
         sql += " ORDER BY position"
         rows = conn.execute(sql, params).fetchall()
-        return [self._decode(p, ts, pl) for p, ts, pl in rows]
+        return [self._decode(p, ts, tv, pl) for p, ts, tv, pl in rows]
 
     def tail(self) -> int:
         """Position one past the last row (a fully trimmed empty table
@@ -517,12 +658,26 @@ class KvBus(AgentBus):
     """Segmented log over a directory, emulating a remote KV/object store.
 
     Each ``append_many`` batch becomes one immutable segment object
-    ``seg-<start>.json`` holding the whole batch as a JSON array. Position
-    assignment is a compare-and-set on the segment's start position: the
-    segment is staged to a temp file and published with an atomic
-    ``os.link`` — if the link target exists, another appender won the slot
-    and we refresh the index and retry at the new tail. Because segments
-    only become visible fully written, readers never observe partial data.
+    ``seg-<start>.bin`` holding the whole batch as concatenated binary
+    entry frames (``core.codec``). Position assignment is a compare-and-set
+    on the segment's start position: the segment is staged to a temp file
+    and published with an atomic ``os.link`` — if the link target exists,
+    another appender won the slot and we refresh the index and retry at
+    the new tail. Because segments only become visible fully written,
+    readers never observe partial data.
+
+    Binary segments are served from ``mmap``: ``_fetch_segment`` maps the
+    object and decodes only the 23-byte frame headers — bodies stay raw
+    buffer slices over the mapping (``LazyEntry``), so an entry a reader
+    never touches (filtered out by ``types=``, skipped by a fold, or
+    merely counted by ``_refresh``) is **zero-copy**: no body bytes are
+    read, no decode happens. The memoryview slices pin the mapping, and a
+    POSIX mapping outlives unlinking, so a segment trimmed by another
+    instance stays readable until its entries are released. Legacy
+    ``seg-<start>.json`` objects (whole-batch JSON arrays) remain fully
+    readable; when both names exist for one start (a crash mid format
+    migration) the binary object wins. ``LOGACT_CODEC=json`` forces new
+    segments back to the legacy JSON format.
 
     A per-instance segment index (start -> entry count) is refreshed with a
     single directory LIST; ``tail()`` is served from the index, and reads
@@ -557,6 +712,7 @@ class KvBus(AgentBus):
         os.makedirs(root, exist_ok=True)
         self._lock = threading.RLock()
         self._segments: Dict[int, int] = {}      # start -> n entries
+        self._seg_ext: Dict[int, str] = {}       # start -> "bin" | "json"
         self._starts: List[int] = []             # sorted segment starts
         #: bounded LRU of decoded segments (start -> entries)
         self._seg_cache: "OrderedDict[int, List[Entry]]" = OrderedDict()
@@ -566,8 +722,24 @@ class KvBus(AgentBus):
         self._tail = self._trim_base
         self.rtt_ops = 0  # charged GET/PUT round-trips
 
+    def _seg_path(self, start: int, ext: str) -> str:
+        return os.path.join(self._root, f"seg-{start:012d}.{ext}")
+
     def _seg_key(self, start: int) -> str:
-        return os.path.join(self._root, f"seg-{start:012d}.json")
+        """Path of an existing segment (its recorded format; new-format
+        default for segments this instance hasn't indexed)."""
+        return self._seg_path(start, self._seg_ext.get(start, "bin"))
+
+    @staticmethod
+    def _encode_segment(entries: List[Entry]) -> bytes:
+        if codec.legacy_json_mode():
+            return json.dumps([e.to_dict() for e in entries],
+                              sort_keys=True, default=_json_default).encode()
+        return codec.encode_entries(entries)
+
+    @staticmethod
+    def _segment_ext() -> str:
+        return "json" if codec.legacy_json_mode() else "bin"
 
     # -- trim-base marker (manifest metadata; free, like LIST) --------------
     def _load_marker(self) -> None:
@@ -607,14 +779,32 @@ class KvBus(AgentBus):
 
     def _fetch_segment(self, start: int) -> Optional[List[Entry]]:
         """GET one segment object (counts one RTT; the latency is paid by
-        the caller outside the lock)."""
+        the caller outside the lock). Binary segments are mmap'd and
+        header-decoded only — bodies stay lazy slices over the mapping."""
         self.rtt_ops += 1
-        try:
-            with open(self._seg_key(start), "rb") as f:
-                data = f.read()
-        except FileNotFoundError:
-            return None
-        return [Entry.from_dict(r) for r in json.loads(data.decode())]
+        ext = self._seg_ext.get(start)
+        for e in ((ext,) if ext else ("bin", "json")):
+            path = self._seg_path(start, e)
+            if e == "bin":
+                try:
+                    with open(path, "rb") as f:
+                        mm = mmap.mmap(f.fileno(), 0,
+                                       access=mmap.ACCESS_READ)
+                except FileNotFoundError:
+                    continue
+                self._seg_ext[start] = "bin"
+                # The LazyPayload slices pin the mapping; the mapping
+                # outlives a concurrent unlink (POSIX), so trimmed-under-us
+                # segments stay readable until their entries are released.
+                return codec.decode_entries(memoryview(mm))
+            try:
+                with open(path, "rb") as f:
+                    data = f.read()
+            except FileNotFoundError:
+                continue
+            self._seg_ext[start] = "json"
+            return [Entry.from_dict(r) for r in json.loads(data.decode())]
+        return None
 
     def _refresh(self) -> int:
         """LIST the store and reconcile the segment index: pull segments we
@@ -626,9 +816,14 @@ class KvBus(AgentBus):
             names = os.listdir(self._root)
         except FileNotFoundError:  # pragma: no cover - root removed
             return ops
-        present = {
-            int(n[4:16]) for n in names
-            if n.startswith("seg-") and n.endswith(".json")}
+        present: Dict[int, str] = {}
+        for n in names:
+            if not n.startswith("seg-"):
+                continue
+            if n.endswith(".bin"):
+                present[int(n[4:16])] = "bin"  # binary wins when both exist
+            elif n.endswith(".json"):
+                present.setdefault(int(n[4:16]), "json")
         gone = [s for s in self._segments if s not in present]
         if gone:
             # Another instance trimmed or compacted. Merge compaction
@@ -636,10 +831,12 @@ class KvBus(AgentBus):
             # is suspect: rebuild the index from scratch (rare — only the
             # non-coordinating instance ever takes this path).
             self._segments.clear()
+            self._seg_ext.clear()
             self._seg_cache.clear()
             self._load_marker()
         changed = bool(gone)
-        for s in sorted(present - self._segments.keys()):
+        self._seg_ext.update(present)
+        for s in sorted(present.keys() - self._segments.keys()):
             entries = self._fetch_segment(s)
             ops += 1
             if entries is None:  # pragma: no cover - raced deletion
@@ -663,14 +860,13 @@ class KvBus(AgentBus):
         ops = 0
         with self._lock:
             ops += self._refresh()
+            ext = self._segment_ext()
             while True:
                 start = self._tail
                 now = time.time()
                 entries = [Entry(start + i, now, p)
                            for i, p in enumerate(payloads)]
-                blob = json.dumps([e.to_dict() for e in entries],
-                                  sort_keys=True,
-                                  default=_json_default).encode()
+                blob = self._encode_segment(entries)
                 tmp = os.path.join(self._root, f".tmp-{uuid.uuid4().hex}")
                 fd = os.open(tmp, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
                 try:
@@ -682,13 +878,19 @@ class KvBus(AgentBus):
                 self.rtt_ops += 1  # one PUT per publish attempt
                 ops += 1
                 try:
-                    os.link(tmp, self._seg_key(start))  # atomic CAS publish
+                    # atomic CAS publish; a legacy-format object at the
+                    # same start also loses us the race (same position)
+                    if os.path.exists(self._seg_path(
+                            start, "json" if ext == "bin" else "bin")):
+                        raise FileExistsError
+                    os.link(tmp, self._seg_path(start, ext))
                 except FileExistsError:
                     os.unlink(tmp)
                     ops += self._refresh()  # lost the race; retry at tail
                     continue
                 os.unlink(tmp)
                 self._segments[start] = len(entries)
+                self._seg_ext[start] = ext
                 self._cache_put(start, entries)
                 self._starts.append(start)
                 self._tail = start + len(entries)
@@ -769,6 +971,7 @@ class KvBus(AgentBus):
                 except FileNotFoundError:  # pragma: no cover - raced
                     pass
                 del self._segments[s]
+                self._seg_ext.pop(s, None)
                 self._seg_cache.pop(s, None)
                 base = max(base, s + n)
             if base != self._trim_base:
@@ -808,9 +1011,8 @@ class KvBus(AgentBus):
                             es = self._fetch_segment(s) or []
                             ops += 1
                         entries.extend(es)
-                    blob = json.dumps([e.to_dict() for e in entries],
-                                      sort_keys=True,
-                                      default=_json_default).encode()
+                    blob = self._encode_segment(entries)
+                    ext = self._segment_ext()
                     tmp = os.path.join(self._root,
                                        f".tmp-{uuid.uuid4().hex}")
                     with open(tmp, "wb") as f:
@@ -819,7 +1021,13 @@ class KvBus(AgentBus):
                             os.fsync(f.fileno())
                     # atomic replace: readers see either the old first
                     # segment or the full merged one, never a partial
-                    os.replace(tmp, self._seg_key(group[0]))
+                    old_ext = self._seg_ext.get(group[0], ext)
+                    os.replace(tmp, self._seg_path(group[0], ext))
+                    if old_ext != ext:  # format migration: drop the old
+                        try:  # name (readers prefer .bin when both exist)
+                            os.unlink(self._seg_path(group[0], old_ext))
+                        except FileNotFoundError:  # pragma: no cover
+                            pass
                     self.rtt_ops += 1  # one PUT per merged object
                     ops += 1
                     for s in group[1:]:
@@ -828,8 +1036,10 @@ class KvBus(AgentBus):
                         except FileNotFoundError:  # pragma: no cover
                             pass
                         del self._segments[s]
+                        self._seg_ext.pop(s, None)
                         self._seg_cache.pop(s, None)
                     self._segments[group[0]] = len(entries)
+                    self._seg_ext[group[0]] = ext
                     self._cache_put(group[0], entries)
                     self._starts = sorted(self._segments)
                     merged += 1
@@ -853,7 +1063,7 @@ def make_bus(backend: str = "memory", path: Optional[str] = None,
         return MemoryBus()
     if backend == "sqlite":
         assert path, "sqlite backend needs a path"
-        return SqliteBus(path)
+        return SqliteBus(path, **kw)
     if backend == "kv":
         assert path, "kv backend needs a root directory"
         return KvBus(path, **kw)

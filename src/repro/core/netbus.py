@@ -28,9 +28,21 @@ cursor protocol of the local backends, frozen in ``docs/bus-protocol.md``:
   MemoryBus-grade wake semantics for a cross-process bus, replacing the
   durable backends' adaptive backoff polling.
 
-Framing: every frame is a 4-byte big-endian length prefix + a UTF-8 JSON
-object, both directions. Requests carry ``id``; responses echo it; frames
-with an ``event`` field and no ``id`` are server pushes.
+Framing: every frame is a 4-byte big-endian length prefix + a payload,
+both directions. A payload starting with ``{`` is a UTF-8 JSON object (the
+v1 format, unchanged); a payload starting with the ``0x00`` marker byte is
+a **binary message**: marker + u32 meta-length + JSON meta object +
+concatenated binary entry frames (``core.codec``). Requests carry ``id``;
+responses echo it; frames with an ``event`` field and no ``id`` are server
+pushes (always JSON — they are tiny).
+
+Codec negotiation (additive — no proto bump): a client that can speak the
+binary entry codec offers ``"codecs": ["binary"]`` at hello; a server that
+accepts replies ``"codec": "binary"`` and both sides then move the bulk
+data — ``append`` payloads and ``read`` entries — as binary entry frames,
+lazily decoded on receipt. Either side omitting the field (an older peer,
+or ``LOGACT_CODEC=json``) leaves the connection on pure JSON; mixed
+clients coexist on one server because the codec is per-connection.
 
 Failure model: requests are retried with exponential backoff against
 connection errors until ``request_timeout`` (appends are retry-safe via the
@@ -57,6 +69,7 @@ import time
 import uuid
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from . import codec as entry_codec
 from .acl import AclError
 from .bus import AgentBus, TrimmedError, TypeFilter
 from .entries import Entry, Payload, PayloadType, _json_default
@@ -103,6 +116,38 @@ def recv_frame(sock: socket.socket) -> Dict[str, Any]:
     return json.loads(_recv_exact(sock, length).decode())
 
 
+#: First payload byte of a binary message (JSON objects start with '{').
+BINARY_MARKER = b"\x00"
+
+
+def send_binary_frame(sock: socket.socket, meta: Dict[str, Any],
+                      blob: bytes) -> None:
+    """Send one binary message: ``0x00`` marker + u32 meta length + JSON
+    meta + concatenated binary entry frames, in a single send. Only sent on
+    connections that negotiated ``codec=binary`` at hello."""
+    data = json.dumps(meta, separators=(",", ":"),
+                      default=_json_default).encode()
+    body_len = 1 + _HDR.size + len(data) + len(blob)
+    sock.sendall(b"".join((_HDR.pack(body_len), BINARY_MARKER,
+                           _HDR.pack(len(data)), data, blob)))
+
+
+def recv_any(sock: socket.socket) -> Tuple[Dict[str, Any], Optional[bytes]]:
+    """Receive one frame of either format: returns ``(obj, None)`` for a
+    JSON frame, ``(meta, entry_frames_blob)`` for a binary message."""
+    (length,) = _HDR.unpack(_recv_exact(sock, _HDR.size))
+    if length > MAX_FRAME_BYTES:
+        raise ConnectionError(f"oversized frame ({length} bytes)")
+    data = _recv_exact(sock, length)
+    if data[:1] == BINARY_MARKER:
+        (mlen,) = _HDR.unpack_from(data, 1)
+        if 5 + mlen > len(data):
+            raise ConnectionError("corrupt binary message (meta overruns)")
+        meta = json.loads(data[5:5 + mlen].decode())
+        return meta, data[5 + mlen:]
+    return json.loads(data.decode()), None
+
+
 def parse_address(address: "str | Tuple[str, int]") -> Tuple[str, int]:
     """Accept ``"host:port"``, ``"port"``, or a ``(host, port)`` tuple."""
     if isinstance(address, str):
@@ -113,11 +158,12 @@ def parse_address(address: "str | Tuple[str, int]") -> Tuple[str, int]:
 
 
 class _Reply:
-    __slots__ = ("event", "frame", "error", "sock")
+    __slots__ = ("event", "frame", "blob", "error", "sock")
 
     def __init__(self, sock: socket.socket) -> None:
         self.event = threading.Event()
         self.frame: Optional[Dict[str, Any]] = None
+        self.blob: Optional[bytes] = None  # binary read responses
         self.error: Optional[Exception] = None
         self.sock = sock
 
@@ -141,14 +187,29 @@ class NetBus(AgentBus):
                        primary ACL layer is the client-side ``BusClient``).
       connect_timeout  total budget for establishing the first connection.
       request_timeout  per-request budget, *including* reconnect retries.
+      codec            ``"auto"`` (default) offers the binary entry codec
+                       at hello and uses it if the server accepts;
+                       ``"json"`` never offers it (the pre-codec wire,
+                       byte-identical to proto v1 JSON clients). Forced to
+                       ``"json"`` by ``LOGACT_CODEC=json``. The negotiated
+                       result is per-connection: ``wire_codec``.
     """
 
     def __init__(self, address: "str | Tuple[str, int]",
                  client_id: Optional[str] = None,
                  role: Optional[str] = None,
                  connect_timeout: float = 10.0,
-                 request_timeout: float = 30.0) -> None:
+                 request_timeout: float = 30.0,
+                 codec: str = "auto") -> None:
         self._addr = parse_address(address)
+        # Offer binary only when this process can decode whatever body
+        # codec the server's log may hold (msgpack by default).
+        self._offer_binary = (codec == "auto"
+                              and entry_codec.HAVE_MSGPACK
+                              and not entry_codec.legacy_json_mode())
+        #: negotiated wire codec of the *current* connection ("json" until
+        #: a hello says otherwise; re-negotiated on every reconnect).
+        self.wire_codec = "json"
         self.client_id = client_id or f"netbus-{uuid.uuid4().hex[:8]}"
         self.role = role
         self._connect_timeout = connect_timeout
@@ -191,9 +252,13 @@ class NetBus(AgentBus):
                 sock = socket.create_connection(
                     self._addr, timeout=min(2.0, remaining))
                 sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                send_frame(sock, {"op": "hello", "proto": PROTO_VERSION,
-                                  "client_id": self.client_id,
-                                  "role": self.role, "subscribe": True})
+                hello: Dict[str, Any] = {
+                    "op": "hello", "proto": PROTO_VERSION,
+                    "client_id": self.client_id,
+                    "role": self.role, "subscribe": True}
+                if self._offer_binary:
+                    hello["codecs"] = ["binary"]
+                send_frame(sock, hello)
                 resp = recv_frame(sock)
             except (OSError, ConnectionError, ValueError):
                 time.sleep(min(backoff, max(0.0, deadline - time.monotonic())))
@@ -205,6 +270,10 @@ class NetBus(AgentBus):
                     f"bus server rejected hello: {resp.get('error')} "
                     f"{resp.get('message', '')}")
             sock.settimeout(None)
+            # Codec negotiation result is per-connection: an older server
+            # (or LOGACT_CODEC=json on either side) simply never confirms.
+            self.wire_codec = ("binary" if self._offer_binary
+                               and resp.get("codec") == "binary" else "json")
             epoch = resp["epoch"]
             with self._push_cond:
                 if self.server_epoch is not None and epoch != self.server_epoch:
@@ -244,7 +313,7 @@ class NetBus(AgentBus):
         exc: Exception = ConnectionError("bus connection lost")
         try:
             while True:
-                frame = recv_frame(sock)
+                frame, blob = recv_any(sock)
                 event = frame.get("event")
                 if event == "append":
                     with self._push_cond:
@@ -259,6 +328,7 @@ class NetBus(AgentBus):
                         reply = self._pending.pop(frame.get("id"), None)
                     if reply is not None:
                         reply.frame = frame
+                        reply.blob = blob
                         reply.event.set()
         except (OSError, ConnectionError, ValueError) as e:
             exc = ConnectionError(f"bus connection lost: {e}")
@@ -278,6 +348,21 @@ class NetBus(AgentBus):
         """One logical request: retries transport errors with backoff until
         the request timeout. Safe for appends too — the batch token makes
         them idempotent on the server."""
+        return self._request_full(op, params, timeout)[0]
+
+    def _request_full(
+            self, op: str, params: Dict[str, Any],
+            timeout: Optional[float] = None,
+            payloads: Optional[Sequence[Payload]] = None,
+    ) -> Tuple[Dict[str, Any], Optional[bytes]]:
+        """Like ``_request`` but returns ``(frame, blob)`` — ``blob`` is the
+        binary entry-frames half of a binary response (None on JSON). When
+        ``payloads`` is given and the connection negotiated the binary
+        codec, the request itself is sent as a binary message (the payload
+        bodies travel as entry frames, not JSON); on a JSON connection they
+        are folded into ``params`` in the legacy shape. The choice is made
+        per attempt, against the codec of the connection actually used —
+        a reconnect mid-retry may land on a differently-negotiated peer."""
         deadline = time.monotonic() + (timeout if timeout is not None
                                        else self._request_timeout)
         backoff = 0.02
@@ -285,7 +370,7 @@ class NetBus(AgentBus):
             if self._closed:
                 raise ConnectionError("bus client closed")
             try:
-                return self._roundtrip(op, params, deadline)
+                return self._roundtrip(op, params, deadline, payloads)
             except AclError:
                 raise  # a PermissionError IS an OSError; don't retry it
             except (ConnectionError, OSError) as e:
@@ -295,8 +380,9 @@ class NetBus(AgentBus):
                 time.sleep(backoff)
                 backoff = min(backoff * 2, 0.5)
 
-    def _roundtrip(self, op: str, params: Dict[str, Any],
-                   deadline: float) -> Dict[str, Any]:
+    def _roundtrip(self, op: str, params: Dict[str, Any], deadline: float,
+                   payloads: Optional[Sequence[Payload]] = None,
+                   ) -> Tuple[Dict[str, Any], Optional[bytes]]:
         with self._io_lock:
             sock = self._sock
             if sock is None:
@@ -306,7 +392,17 @@ class NetBus(AgentBus):
             with self._pending_lock:
                 self._pending[rid] = reply
             try:
-                send_frame(sock, {"id": rid, "op": op, **params})
+                if payloads is not None and self.wire_codec == "binary":
+                    send_binary_frame(
+                        sock, {"id": rid, "op": op, **params},
+                        entry_codec.encode_payloads(payloads))
+                elif payloads is not None:
+                    wire = [{"type": p.type.value, "body": p.body}
+                            for p in payloads]
+                    send_frame(sock, {"id": rid, "op": op,
+                                      "payloads": wire, **params})
+                else:
+                    send_frame(sock, {"id": rid, "op": op, **params})
                 self.n_requests += 1
             except OSError as e:
                 with self._pending_lock:
@@ -319,7 +415,7 @@ class NetBus(AgentBus):
             raise TimeoutError(f"bus request {op!r} timed out")
         if reply.error is not None:
             raise reply.error
-        return self._check(reply.frame)  # type: ignore[arg-type]
+        return self._check(reply.frame), reply.blob  # type: ignore[arg-type]
 
     @staticmethod
     def _check(frame: Dict[str, Any]) -> Dict[str, Any]:
@@ -340,9 +436,9 @@ class NetBus(AgentBus):
         positions instead of appending twice."""
         if not payloads:
             return []
-        wire = [{"type": p.type.value, "body": p.body} for p in payloads]
         batch = f"{self._batch_prefix}-{next(self._batch_ids)}"
-        frame = self._request("append", {"payloads": wire, "batch": batch})
+        frame, _ = self._request_full("append", {"batch": batch},
+                                      payloads=payloads)
         positions = [int(p) for p in frame["positions"]]
         with self._push_cond:  # read-your-writes for the local tail view
             if positions[-1] + 1 > self._known_tail:
@@ -360,7 +456,9 @@ class NetBus(AgentBus):
         if types is not None:
             params["types"] = sorted(PayloadType.parse(t).value
                                      for t in types)
-        frame = self._request("read", params)
+        frame, blob = self._request_full("read", params)
+        if blob is not None:  # binary response: lazy entries over the blob
+            return entry_codec.decode_entries(blob)
         return [Entry.from_dict(d) for d in frame["entries"]]
 
     def tail(self, refresh: bool = False) -> int:

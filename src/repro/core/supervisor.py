@@ -20,6 +20,7 @@ from .snapshot import SnapshotStore
 class Supervisor:
     def __init__(self, worker_buses: Dict[str, AgentBus],
                  supervisor_id: str = "supervisor"):
+        self.supervisor_id = supervisor_id
         self.workers = dict(worker_buses)
         self.clients = {name: BusClient(bus, supervisor_id, "supervisor")
                         for name, bus in self.workers.items()}

@@ -1,8 +1,13 @@
 """The bus server: exposes any local bus backend to NetBus clients.
 
 ``BusServer`` fronts an ``AgentBus`` (``SqliteBus``/``KvBus`` for
-durability, ``MemoryBus`` for tests) with the length-prefixed JSON wire
-protocol of ``repro.core.netbus`` (frozen in ``docs/bus-protocol.md``).
+durability, ``MemoryBus`` for tests) with the length-prefixed wire
+protocol of ``repro.core.netbus`` (frozen in ``docs/bus-protocol.md``):
+JSON frames for control, and — per connection, if the client offers
+``codecs: ["binary"]`` at hello and the server accepts — binary entry
+frames (``repro.core.codec``) for the bulk data of ``append``/``read``.
+JSON-only clients coexist with binary ones on the same server; the codec
+is negotiated per connection and the backend stores one canonical form.
 This is the piece that makes the log the *externally reachable* source of
 truth: Driver/Voter/Executor processes on any machine converge on one
 server, and the server's single view of the tail gives networked clients
@@ -59,11 +64,12 @@ import uuid
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Set, Tuple
 
+from repro.core import codec as entry_codec
 from repro.core.acl import AclError, ROLES
 from repro.core.bus import AgentBus, TrimmedError, make_bus
 from repro.core.entries import Payload, PayloadType
-from repro.core.netbus import (MAX_FRAME_BYTES, PROTO_VERSION, recv_frame,
-                               send_frame)
+from repro.core.netbus import (MAX_FRAME_BYTES, PROTO_VERSION, recv_any,
+                               recv_frame, send_binary_frame, send_frame)
 
 #: Retained (client_id, batch) -> positions records for append dedupe.
 _DEDUPE_MAX = 4096
@@ -90,6 +96,7 @@ class _Conn:
         self.client_id: str = f"anon-{addr[0]}:{addr[1]}"
         self.role: Optional[str] = None
         self.subscribed = False
+        self.codec = "json"  # per-connection; negotiated at hello
         self.alive = True
         # SO_SNDTIMEO bounds blocking sends without touching recv behavior.
         self.sock.setsockopt(
@@ -103,6 +110,15 @@ class _Conn:
         try:
             with self._send_lock:
                 send_frame(self.sock, obj)
+        except (OSError, ValueError):
+            self.close()
+
+    def send_binary(self, meta: Dict[str, Any], blob: bytes) -> None:
+        if not self.alive:
+            return
+        try:
+            with self._send_lock:
+                send_binary_frame(self.sock, meta, blob)
         except (OSError, ValueError):
             self.close()
 
@@ -133,7 +149,13 @@ class BusServer:
         self.address: Tuple[str, int] = self._listener.getsockname()[:2]
         self._tail_cond = threading.Condition()
         self._tail = bus.tail()
-        self._append_lock = threading.Lock()  # dedupe-check + append atomicity
+        # Dedupe bookkeeping lock only — the appends themselves run
+        # CONCURRENTLY (the backend is thread-safe and SqliteBus
+        # group-commits overlapping batches into one transaction). A
+        # retried batch that is still in flight parks on its _inflight
+        # event instead of re-appending.
+        self._dedupe_lock = threading.Lock()
+        self._inflight: Dict[Tuple[str, str], threading.Event] = {}
         self._dedupe: "OrderedDict[Tuple[str, str], List[int]]" = OrderedDict()
         self._conns: Set[_Conn] = set()
         self._conns_lock = threading.Lock()
@@ -185,14 +207,17 @@ class BusServer:
     def _serve_conn(self, conn: _Conn) -> None:
         try:
             while not self._closed:
-                frame = recv_frame(conn.sock)
+                frame, blob = recv_any(conn.sock)
                 rid = frame.get("id")
                 op = frame.get("op")
                 if op == "hello":
                     conn.send(self._hello(conn, frame))
                     continue
+                out_blob: Optional[bytes] = None
                 try:
-                    resp = self._dispatch(conn, op, frame)
+                    resp = self._dispatch(conn, op, frame, blob)
+                    if isinstance(resp, tuple):  # binary response
+                        resp, out_blob = resp
                 except TrimmedError as e:
                     resp = {"ok": False, "error": "trimmed",
                             "requested": e.requested, "base": e.base}
@@ -203,7 +228,10 @@ class BusServer:
                             "message": f"{type(e).__name__}: {e}"}
                 if rid is not None:
                     resp["id"] = rid
-                    conn.send(resp)
+                    if out_blob is not None:
+                        conn.send_binary(resp, out_blob)
+                    else:
+                        conn.send(resp)
         except (OSError, ConnectionError, ValueError, json.JSONDecodeError):
             pass
         finally:
@@ -222,6 +250,13 @@ class BusServer:
                     "message": f"unknown role {role!r}"}
         conn.client_id = str(frame.get("client_id") or conn.client_id)
         conn.role = role
+        # Codec negotiation (additive): accept the binary entry codec only
+        # if the client offered it AND this server isn't forced to the
+        # legacy JSON wire. Unconfirmed = pure JSON, per connection.
+        conn.codec = ("binary"
+                      if "binary" in (frame.get("codecs") or [])
+                      and entry_codec.HAVE_MSGPACK
+                      and not entry_codec.legacy_json_mode() else "json")
         # Subscribe BEFORE reading the tail for the reply: an append landing
         # between the two is then pushed, so the client's view (seeded with
         # the reply tail, advanced by pushes) never has a notification gap.
@@ -232,15 +267,19 @@ class BusServer:
                 self._tail = tail
                 self._tail_cond.notify_all()
             tail = self._tail
-        return {"ok": True, "epoch": self.epoch, "tail": tail,
+        resp = {"ok": True, "epoch": self.epoch, "tail": tail,
                 "trim_base": self.bus.trim_base(),
                 "max_frame": MAX_FRAME_BYTES}
+        if conn.codec == "binary":
+            resp["codec"] = "binary"
+        return resp
 
     # -- op dispatch ---------------------------------------------------------
     def _dispatch(self, conn: _Conn, op: Optional[str],
-                  frame: Dict[str, Any]) -> Dict[str, Any]:
+                  frame: Dict[str, Any],
+                  blob: Optional[bytes] = None):
         if op == "append":
-            return self._op_append(conn, frame)
+            return self._op_append(conn, frame, blob)
         if op == "read":
             return self._op_read(conn, frame)
         if op == "tail":
@@ -259,10 +298,16 @@ class BusServer:
         return {"ok": False, "error": "bad_op",
                 "message": f"unknown op {op!r}"}
 
-    def _op_append(self, conn: _Conn, frame: Dict[str, Any]) -> Dict[str, Any]:
-        payloads = [Payload(PayloadType(p["type"]), p["body"])
-                    for p in frame["payloads"]]
+    def _op_append(self, conn: _Conn, frame: Dict[str, Any],
+                   blob: Optional[bytes] = None) -> Dict[str, Any]:
+        if blob is not None:  # binary request: payloads as entry frames
+            payloads = entry_codec.decode_payloads(blob)
+        else:
+            payloads = [Payload(PayloadType(p["type"]), p["body"])
+                        for p in frame["payloads"]]
         if conn.role is not None:
+            # On the binary path this touches only the frame headers —
+            # denied bodies are never decoded.
             denied = {p.type for p in payloads} - ROLES[conn.role].append
             if denied:
                 raise AclError(
@@ -270,17 +315,38 @@ class BusServer:
                     f"{sorted(t.value for t in denied)}")
         batch = frame.get("batch")
         key = (conn.client_id, str(batch)) if batch else None
-        with self._append_lock:
-            if key is not None:
-                hit = self._dedupe.get(key)
-                if hit is not None:  # retried batch: replay, don't re-append
-                    self._dedupe.move_to_end(key)
-                    return {"ok": True, "positions": hit, "deduped": True}
+        # Dedupe without serializing the appends themselves: a fresh batch
+        # registers an in-flight event and appends concurrently with other
+        # clients (SqliteBus group-commits the overlap into one
+        # transaction); a retry of a *completed* batch replays the recorded
+        # positions; a retry of a batch still in flight parks on its event
+        # and then replays — never a double append.
+        if key is not None:
+            while True:
+                with self._dedupe_lock:
+                    hit = self._dedupe.get(key)
+                    if hit is not None:
+                        self._dedupe.move_to_end(key)
+                        return {"ok": True, "positions": hit,
+                                "deduped": True}
+                    ev = self._inflight.get(key)
+                    if ev is None:
+                        self._inflight[key] = threading.Event()
+                        break
+                ev.wait()  # first attempt still appending: await its result
+        try:
             positions = self.bus.append_many(payloads)
             if key is not None:
-                self._dedupe[key] = positions
-                while len(self._dedupe) > _DEDUPE_MAX:
-                    self._dedupe.popitem(last=False)
+                with self._dedupe_lock:
+                    self._dedupe[key] = positions
+                    while len(self._dedupe) > _DEDUPE_MAX:
+                        self._dedupe.popitem(last=False)
+        finally:
+            if key is not None:
+                with self._dedupe_lock:
+                    ev = self._inflight.pop(key, None)
+                if ev is not None:
+                    ev.set()
         # The appender learns the new tail from this reply (its client folds
         # it into the local view), so its own connection is excluded from
         # the push fan-out — one less send and one less thread wakeup
@@ -288,7 +354,7 @@ class BusServer:
         self._notify_append(positions[-1] + 1, exclude=conn)
         return {"ok": True, "positions": positions}
 
-    def _op_read(self, conn: _Conn, frame: Dict[str, Any]) -> Dict[str, Any]:
+    def _op_read(self, conn: _Conn, frame: Dict[str, Any]):
         types = frame.get("types")
         fs = (None if types is None
               else [PayloadType(t) for t in types])
@@ -298,6 +364,10 @@ class BusServer:
                          & allowed), key=lambda t: t.value)
         entries = self.bus.read(int(frame["start"]), frame.get("end"),
                                 types=fs)
+        if conn.codec == "binary":
+            # Entries from a binary-codec backend are LazyEntry: encoding
+            # reuses their raw body bytes — pass-through, no decode/re-encode.
+            return {"ok": True}, entry_codec.encode_entries(entries)
         return {"ok": True, "entries": [e.to_dict() for e in entries]}
 
     def _op_wait(self, frame: Dict[str, Any]) -> Dict[str, Any]:

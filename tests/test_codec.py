@@ -1,0 +1,166 @@
+"""core.codec: binary entry framing, lazy decode, codec negotiation rules.
+
+Round-trip properties (non-ASCII text, nested bodies, every PayloadType,
+checkpoint/trim-base markers), header-only filtering with decode-count
+instrumentation, legacy-JSON forcing, and corrupt-frame rejection.
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec
+from repro.core import entries as E
+from repro.core.entries import ALL_TYPES, Entry, Payload, PayloadType
+
+
+def _one_of_each_type():
+    """One realistic payload per PayloadType (helpers where they exist —
+    including the Checkpoint entries that anchor trim bases)."""
+    return [
+        E.inf_in({"ctx": "übung"}, "d1"),
+        E.inf_out({"plan": ["α", "β"]}, "d1"),
+        E.intent("write_file", {"path": "/tmp/naïve.txt"}, "d1"),
+        E.vote("i1", "rule", "v1", True, reason="日本語 reason"),
+        E.commit("i1", "dec"),
+        E.abort("i2", "dec", reason="预算"),
+        E.result("i1", True, {"out": "héllo"}, "x1"),
+        E.mail("Привет, мир", sender="usér"),
+        E.policy("decider", {"mode": "on_by_default"}),
+        E.checkpoint("driver-1", 42, "snap-00042", driver_epoch=3),
+    ]
+
+
+def test_covers_every_payload_type():
+    got = {p.type for p in _one_of_each_type()}
+    assert got == set(ALL_TYPES)
+
+
+@pytest.mark.parametrize("body_codec",
+                         [codec.BODY_JSON] +
+                         ([codec.BODY_MSGPACK] if codec.HAVE_MSGPACK else []))
+def test_entries_roundtrip_all_types(body_codec):
+    entries = [Entry(i, 1000.5 + i, p)
+               for i, p in enumerate(_one_of_each_type())]
+    buf = codec.encode_entries(entries, body_codec)
+    for lazy in (True, False):
+        got = codec.decode_entries(buf, lazy=lazy)
+        assert got == entries
+        assert entries == got  # reflected: Entry == LazyEntry too
+        for g, e in zip(got, entries):
+            assert g.position == e.position
+            assert g.realtime_ts == e.realtime_ts
+            assert g.type is e.type
+            assert g.body == e.body
+            assert g.to_dict() == e.to_dict()
+
+
+BODY = st.dictionaries(
+    st.text(min_size=1, max_size=8),
+    st.one_of(st.integers(-2**40, 2**40), st.booleans(),
+              st.text(max_size=20),
+              st.lists(st.integers(0, 9), max_size=4),
+              st.dictionaries(st.text(min_size=1, max_size=4),
+                              st.text(max_size=8), max_size=3)),
+    max_size=6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(list(ALL_TYPES)), BODY),
+                min_size=1, max_size=12))
+def test_roundtrip_property(items):
+    entries = [Entry(i, float(i) * 0.25, Payload(t, dict(b, unicode="ü→λ")))
+               for i, (t, b) in enumerate(items)]
+    buf = codec.encode_entries(entries)
+    assert codec.decode_entries(buf) == entries
+    assert codec.decode_entries(buf, lazy=False) == entries
+
+
+def test_header_only_filtering_never_touches_bodies():
+    entries = [Entry(i, 0.5, p) for i, p in enumerate(_one_of_each_type())]
+    buf = codec.encode_entries(entries)
+    codec.DECODES.reset()
+    got = codec.decode_entries(buf, types=frozenset({PayloadType.MAIL}))
+    assert [e.type for e in got] == [PayloadType.MAIL]
+    got2 = codec.decode_entries(buf, start=3, end=7)
+    assert [e.position for e in got2] == [3, 4, 5, 6]
+    # selection by header alone: zero body decodes so far
+    assert codec.DECODES.bodies == 0
+    assert got[0].body["text"] == "Привет, мир"
+    assert codec.DECODES.bodies == 1  # only the body actually accessed
+
+
+def test_lazy_body_memoized_and_raw_fastpath():
+    e = Entry(7, 1.5, E.mail("memo"))
+    buf = codec.encode_entries([e])
+    (lz,) = codec.decode_entries(buf)
+    codec.DECODES.reset()
+    assert lz.body == e.body
+    assert lz.body is lz.body  # memoized, not re-decoded
+    assert codec.DECODES.bodies == 1
+    # re-encoding an undecoded lazy entry reuses its raw bytes verbatim
+    (lz2,) = codec.decode_entries(buf)
+    codec.DECODES.reset()
+    assert codec.encode_entries([lz2]) == buf
+    assert codec.DECODES.bodies == 0
+
+
+def test_payload_blob_roundtrip():
+    for p in _one_of_each_type():
+        lp = codec.payload_from_blob(p.type, codec.payload_blob(p))
+        assert lp == p and p == lp
+        assert lp.to_json() == p.to_json()  # introspect sizing path
+
+
+def test_payloads_wire_roundtrip_order_and_acl_headers():
+    ps = [E.mail("a"), E.vote("i", "rule", "v", False), E.mail("ç")]
+    blob = codec.encode_payloads(ps)
+    codec.DECODES.reset()
+    got = codec.decode_payloads(blob)
+    # type checks (the server's ACL gate) need only the frame headers
+    assert [p.type for p in got] == [p.type for p in ps]
+    assert codec.DECODES.bodies == 0
+    assert got == ps
+
+
+def test_logact_codec_json_forces_json_bodies(monkeypatch):
+    monkeypatch.setenv("LOGACT_CODEC", "json")
+    assert codec.legacy_json_mode()
+    assert codec.default_body_codec() == codec.BODY_JSON
+    e = Entry(0, 1.0, E.mail("fallback"))
+    buf = codec.encode_entries([e])
+    assert buf[1] == codec.BODY_JSON  # body-codec byte in the header
+    assert codec.decode_entries(buf) == [e]
+    monkeypatch.delenv("LOGACT_CODEC")
+    assert not codec.legacy_json_mode()
+
+
+def test_mixed_body_codecs_in_one_buffer():
+    if not codec.HAVE_MSGPACK:
+        pytest.skip("msgpack unavailable")
+    a = Entry(0, 1.0, E.mail("json-body"))
+    b = Entry(1, 2.0, E.mail("msgpack-body"))
+    buf = (codec.encode_entries([a], codec.BODY_JSON)
+           + codec.encode_entries([b], codec.BODY_MSGPACK))
+    assert codec.decode_entries(buf) == [a, b]  # per-entry codec byte wins
+
+
+def test_corrupt_frames_rejected():
+    buf = codec.encode_entries([Entry(0, 1.0, E.mail("x"))])
+    with pytest.raises(codec.CodecError):
+        codec.decode_entries(buf[:10])  # truncated header
+    with pytest.raises(codec.CodecError):
+        codec.decode_entries(buf[:-3])  # truncated body
+    with pytest.raises(codec.CodecError):
+        codec.decode_entries(bytes([99]) + buf[1:])  # unknown version
+    bad_tag = bytearray(buf)
+    bad_tag[2] = 200
+    with pytest.raises(codec.CodecError):
+        codec.decode_entries(bytes(bad_tag))  # unknown type tag
+
+
+def test_type_tags_are_enum_declaration_order():
+    # The frame's one-byte type tag is the index into ALL_TYPES: the enum
+    # is append-only (docs/bus-protocol.md versioning rules). Pin the
+    # existing assignments so a reorder cannot slip through.
+    assert codec.TAG_TYPES == tuple(ALL_TYPES)
+    assert codec.TYPE_TAGS[PayloadType.INF_IN] == 0
+    assert codec.TYPE_TAGS[PayloadType.CHECKPOINT] == len(ALL_TYPES) - 1

@@ -48,6 +48,72 @@ def test_roundtrip_and_cross_client_visibility(server):
         b.close()
 
 
+def test_mixed_codec_clients_on_one_server(server, tmp_path):
+    """Codec negotiation at hello: a JSON-proto client (pre-codec wire,
+    never offers `codecs`) and a binary client interoperate on one server —
+    each sees the other's appends, byte-identical bodies, same positions.
+    Acceptance criterion for the negotiated binary wire."""
+    from repro.core import codec
+
+    if not codec.HAVE_MSGPACK or codec.legacy_json_mode():
+        pytest.skip("binary wire codec unavailable in this environment")
+    jc = NetBus(addr(server), client_id="legacy-json", codec="json")
+    bc = NetBus(addr(server), client_id="binary")
+    try:
+        assert jc.wire_codec == "json"
+        assert bc.wire_codec == "binary"
+        assert jc.append_many([E.mail("from-json", tag="ü")]) == [0]
+        assert bc.append_many(
+            [E.mail("from-binary", nested={"k": [1, 2]}),
+             E.vote("i1", "rule", "v", True)]) == [1, 2]
+        via_json = jc.read(0)
+        via_bin = bc.read(0)
+        assert via_json == via_bin and via_bin == via_json
+        assert [e.body.get("text") for e in via_bin[:2]] == \
+            ["from-json", "from-binary"]
+        assert via_bin[0].body["tag"] == "ü"
+        assert via_json[1].body["nested"] == {"k": [1, 2]}
+        # push-down filter works identically on both wires
+        assert [e.position for e in jc.read(0, types=[PayloadType.VOTE])] \
+            == [e.position for e in bc.read(0, types=[PayloadType.VOTE])] \
+            == [2]
+        # dedupe: a binary batch retried as the same token replays
+        frame, _ = bc._request_full("append", {"batch": "fixed-tok"},
+                                    payloads=[E.mail("once")])
+        frame2, _ = bc._request_full("append", {"batch": "fixed-tok"},
+                                     payloads=[E.mail("once")])
+        assert frame2["positions"] == frame["positions"]
+        assert frame2.get("deduped") is True
+    finally:
+        jc.close()
+        bc.close()
+
+
+def test_binary_wire_lazy_end_to_end(tmp_path):
+    """Server over a binary SqliteBus: a wire read decodes ZERO bodies in
+    the client process until they are touched, and the server side passes
+    stored blobs through without re-encoding (decode count stays 0)."""
+    from repro.core import codec
+
+    if not codec.HAVE_MSGPACK or codec.legacy_json_mode():
+        pytest.skip("binary wire codec unavailable in this environment")
+    backing = SqliteBus(str(tmp_path / "lazy.db"))
+    srv = BusServer(backing).start()
+    nb = NetBus(addr(srv), client_id="lazy")
+    try:
+        nb.append_many([E.mail(f"m{i}") for i in range(16)])
+        codec.DECODES.reset()
+        es = nb.read(0)
+        assert len(es) == 16
+        assert codec.DECODES.bodies == 0  # headers only, client AND server
+        assert es[3].body["text"] == "m3"
+        assert codec.DECODES.bodies == 1
+    finally:
+        nb.close()
+        srv.close()
+        backing.close()
+
+
 def test_push_wake_across_clients(server):
     """The tentpole property: a waiting client is woken by a server push
     when ANOTHER client appends — no polling of the backing store."""

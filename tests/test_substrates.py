@@ -156,3 +156,42 @@ def test_supervisor_dedups_and_broadcasts_fixes():
     from repro.core.acl import AclError
     with pytest.raises(AclError):
         sup.clients["w0"].append(E.commit("i", "sup"))
+
+
+def test_supervisor_checkpoint_and_bootstrap():
+    """The supervisor's per-worker observers checkpoint (announcing their
+    cursors on the worker buses, which gates trims) and a successor
+    supervisor bootstraps from those snapshots."""
+    from repro.core import entries as E
+    from repro.core.acl import BusClient
+    from repro.core.entries import PayloadType
+    from repro.core.snapshot import MemorySnapshotStore
+
+    buses = {f"w{i}": MemoryBus() for i in range(2)}
+    agents = {"w0": make_worker(buses["w0"], [(0, 10)], fix_on_first=True),
+              "w1": make_worker(buses["w1"], [(10, 20)])}
+    sup = Supervisor(buses)
+    for a in agents.values():
+        a.send_mail("go")
+    for _ in range(40):
+        for a in agents.values():
+            a.tick()
+    sup.sweep()
+    store = MemorySnapshotStore()
+    positions = sup.checkpoint(store)
+    assert set(positions) == set(buses)
+    # the checkpoint is announced on each worker bus under the observer id
+    for name, bus in buses.items():
+        cps = [e for e in bus.read(0, types=[PayloadType.CHECKPOINT])
+               if e.body.get("component_id") == f"supervisor@{name}"]
+        assert cps and cps[-1].body["position"] == positions[name]
+    # a successor resumes folding at the snapshot positions (it does not
+    # re-read the folded prefix), and harvests fixes from the new suffix
+    sup2 = Supervisor(buses)
+    resumed = sup2.bootstrap(store)
+    assert resumed == positions
+    BusClient(buses["w1"], "x1", "executor").append(E.result(
+        "i-new", True, {"fix": {"issue": "flaky DNS",
+                                "remedy": "retry with backoff"}}, "x1"))
+    sup2.sweep()
+    assert "flaky DNS" in sup2.known_fixes
