@@ -121,6 +121,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from . import codec
 from .entries import ALL_TYPES, Entry, Payload, PayloadType, _json_default
+from .faults import CrashPoint, fault_point
 
 #: Adaptive wait bounds for the durable backends' poll loops.
 _BACKOFF_MIN = 0.0005
@@ -287,6 +288,7 @@ class MemoryBus(AgentBus):
     def append_many(self, payloads: Sequence[Payload]) -> List[int]:
         if not payloads:
             return []
+        fault_point("memory.append.crash")
         with self._cond:
             base = self._trim_base + len(self._entries)
             now = time.time()
@@ -541,15 +543,18 @@ class SqliteBus(AgentBus):
                     for tval, blob in items:
                         rows.append((pos, ts, tval, blob))
                         pos += 1
+                fault_point("sqlite.append.pre_txn")
                 try:
                     with conn:  # ONE transaction for the whole group
                         conn.executemany(
                             "INSERT INTO log(position, realtime_ts, type, "
                             "payload) VALUES (?, ?, ?, ?)", rows)
+                        fault_point("sqlite.append.mid_txn")
                 except sqlite3.IntegrityError:
                     # Another process appended since we cached the tail.
                     self._cached_tail = None
                     continue
+                fault_point("sqlite.append.post_txn")
                 self._cached_tail = pos
                 self.gc_commits += 1
                 self.gc_batches += len(encoded)
@@ -617,12 +622,15 @@ class SqliteBus(AgentBus):
         with self._append_lock:
             target = min(max(min_position, self.trim_base()), self.tail())
             if target > self._trim_base:
+                fault_point("sqlite.trim.pre_txn")
                 with conn:  # DELETE + base update in one transaction
                     conn.execute("DELETE FROM log WHERE position < ?",
                                  (target,))
+                    fault_point("sqlite.trim.mid_txn")
                     conn.execute(
                         "INSERT OR REPLACE INTO meta(key, value) "
                         "VALUES ('trim_base', ?)", (str(target),))
+                fault_point("sqlite.trim.post_txn")
                 self._trim_base = target
                 with self._cache_lock:
                     for p in [p for p in self._decode_cache if p < target]:
@@ -653,6 +661,18 @@ class SqliteBus(AgentBus):
 # ---------------------------------------------------------------------------
 # Disaggregated KV backend ("AnonDB" emulation) — segmented log
 # ---------------------------------------------------------------------------
+
+def _torn_blob(blob: bytes, act) -> bytes:
+    """Truncate a segment blob mid-frame, the way a crashed writer (or a
+    lossy store) leaves it. The default cut drops the last 7 bytes, which
+    always lands inside the final entry's header or body, so the codec
+    must reject the remainder; ``act.arg`` overrides with a fraction."""
+    if act.arg:
+        keep = int(len(blob) * float(act.arg))
+    else:
+        keep = len(blob) - 7
+    return blob[:max(1, min(keep, len(blob) - 1))]
+
 
 class KvBus(AgentBus):
     """Segmented log over a directory, emulating a remote KV/object store.
@@ -721,6 +741,7 @@ class KvBus(AgentBus):
         self._load_marker()
         self._tail = self._trim_base
         self.rtt_ops = 0  # charged GET/PUT round-trips
+        self.quarantined = 0  # torn segments renamed aside, never served
 
     def _seg_path(self, start: int, ext: str) -> str:
         return os.path.join(self._root, f"seg-{start:012d}.{ext}")
@@ -792,19 +813,44 @@ class KvBus(AgentBus):
                                        access=mmap.ACCESS_READ)
                 except FileNotFoundError:
                     continue
+                try:
+                    # The LazyPayload slices pin the mapping; the mapping
+                    # outlives a concurrent unlink (POSIX), so
+                    # trimmed-under-us segments stay readable until their
+                    # entries are released.
+                    entries = codec.decode_entries(memoryview(mm))
+                except codec.CodecError:
+                    self._quarantine(start, path)
+                    continue
                 self._seg_ext[start] = "bin"
-                # The LazyPayload slices pin the mapping; the mapping
-                # outlives a concurrent unlink (POSIX), so trimmed-under-us
-                # segments stay readable until their entries are released.
-                return codec.decode_entries(memoryview(mm))
+                return entries
             try:
                 with open(path, "rb") as f:
                     data = f.read()
             except FileNotFoundError:
                 continue
+            try:
+                rows = json.loads(data.decode())
+            except ValueError:
+                self._quarantine(start, path)
+                continue
             self._seg_ext[start] = "json"
-            return [Entry.from_dict(r) for r in json.loads(data.decode())]
+            return [Entry.from_dict(r) for r in rows]
         return None
+
+    def _quarantine(self, start: int, path: str) -> None:
+        """Rename a torn segment object aside (``quar-`` prefix, invisible
+        to ``_refresh``) so it is never served as entries and the start
+        slot reopens for a clean republish. A torn object can only be an
+        unacknowledged publish — its writer died before ``append_many``
+        returned — so dropping it loses nothing a client was promised."""
+        quar = os.path.join(self._root, "quar-" + os.path.basename(path))
+        try:
+            os.replace(path, quar)
+        except OSError:  # pragma: no cover - raced deletion
+            pass
+        self._seg_ext.pop(start, None)
+        self.quarantined += 1
 
     def _refresh(self) -> int:
         """LIST the store and reconcile the segment index: pull segments we
@@ -845,6 +891,24 @@ class KvBus(AgentBus):
             self._cache_put(s, entries)
             changed = True
         if changed:
+            # Drop compaction leftovers: a crash between the merged-object
+            # publish and the tail unlinks (kv.compact.post_replace) leaves
+            # segments whose whole range a predecessor already covers;
+            # serving them would duplicate positions. Finish the dead
+            # compactor's work here.
+            max_end = -1
+            for s in sorted(self._segments):
+                end = s + self._segments[s]
+                if end <= max_end:
+                    try:
+                        os.unlink(self._seg_key(s))
+                    except FileNotFoundError:  # pragma: no cover - raced
+                        pass
+                    del self._segments[s]
+                    self._seg_ext.pop(s, None)
+                    self._seg_cache.pop(s, None)
+                    continue
+                max_end = max(max_end, end)
             self._starts = sorted(self._segments)
             if self._starts:
                 last = self._starts[-1]
@@ -867,7 +931,14 @@ class KvBus(AgentBus):
                 entries = [Entry(start + i, now, p)
                            for i, p in enumerate(payloads)]
                 blob = self._encode_segment(entries)
+                fault_point("kv.append.pre_stage")
                 tmp = os.path.join(self._root, f".tmp-{uuid.uuid4().hex}")
+                act = fault_point("kv.append.torn_stage")
+                if act is not None:
+                    # die mid-stage: a truncated temp object, never linked
+                    with open(tmp, "wb") as f:
+                        f.write(_torn_blob(blob, act))
+                    raise CrashPoint(act.point, act.at_hit)
                 fd = os.open(tmp, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
                 try:
                     os.write(fd, blob)
@@ -877,6 +948,15 @@ class KvBus(AgentBus):
                     os.close(fd)
                 self.rtt_ops += 1  # one PUT per publish attempt
                 ops += 1
+                fault_point("kv.append.pre_link")
+                act = fault_point("kv.append.torn_publish")
+                if act is not None:
+                    # the store acked a partial object under the final
+                    # name (torn publish): readers must quarantine it
+                    with open(self._seg_path(start, ext), "wb") as f:
+                        f.write(_torn_blob(blob, act))
+                    os.unlink(tmp)
+                    raise CrashPoint(act.point, act.at_hit)
                 try:
                     # atomic CAS publish; a legacy-format object at the
                     # same start also loses us the race (same position)
@@ -889,6 +969,7 @@ class KvBus(AgentBus):
                     ops += self._refresh()  # lost the race; retry at tail
                     continue
                 os.unlink(tmp)
+                fault_point("kv.append.post_link")
                 self._segments[start] = len(entries)
                 self._seg_ext[start] = ext
                 self._cache_put(start, entries)
@@ -956,16 +1037,32 @@ class KvBus(AgentBus):
     def trim(self, min_position: int) -> int:
         """Segment-aligned trim: deletes every segment that lies entirely
         below ``min_position``; the new base is the end of the last dropped
-        segment (never above ``min_position``)."""
+        segment (never above ``min_position``).
+
+        The base marker is advanced **before** any segment is unlinked: a
+        crash mid-unlink then leaves only invisible garbage below the new
+        base (reclaimed by a later trim), never a gap of acknowledged
+        entries above it. The old order (unlink, then marker) could lose
+        the positions of already-deleted segments if the trimmer died
+        before the marker write."""
         ops = 0
         with self._lock:
             ops += self._refresh()
             target = min(min_position, self._tail)
             base = self._trim_base
-            for s in list(self._starts):
+            drop: List[int] = []
+            for s in self._starts:
                 n = self._segments[s]
                 if s + n > target:
                     break  # starts are sorted; later segments survive too
+                drop.append(s)
+                base = max(base, s + n)
+            fault_point("kv.trim.pre_marker")
+            if base != self._trim_base:
+                self._trim_base = base
+                self._write_marker()
+            fault_point("kv.trim.post_marker")
+            for s in drop:
                 try:
                     os.unlink(self._seg_key(s))
                 except FileNotFoundError:  # pragma: no cover - raced
@@ -973,11 +1070,8 @@ class KvBus(AgentBus):
                 del self._segments[s]
                 self._seg_ext.pop(s, None)
                 self._seg_cache.pop(s, None)
-                base = max(base, s + n)
-            if base != self._trim_base:
-                self._trim_base = base
+            if drop:
                 self._starts = sorted(self._segments)
-                self._write_marker()
             new_base = self._trim_base
         self._pay(ops)
         return new_base
@@ -1019,10 +1113,12 @@ class KvBus(AgentBus):
                         f.write(blob)
                         if self._fsync:
                             os.fsync(f.fileno())
+                    fault_point("kv.compact.pre_replace")
                     # atomic replace: readers see either the old first
                     # segment or the full merged one, never a partial
                     old_ext = self._seg_ext.get(group[0], ext)
                     os.replace(tmp, self._seg_path(group[0], ext))
+                    fault_point("kv.compact.post_replace")
                     if old_ext != ext:  # format migration: drop the old
                         try:  # name (readers prefer .bin when both exist)
                             os.unlink(self._seg_path(group[0], old_ext))

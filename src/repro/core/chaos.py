@@ -1,0 +1,565 @@
+"""Crash-point recovery harness (ISSUE 9 tentpole).
+
+``core.faults`` makes every failure window in the data plane a *named
+injection point*; this module drives each point through the cycle the
+paper's reliability claim (§3.2, §5.1) actually promises:
+
+    arm fault -> run a known workload -> die at the point ->
+    whole-process reboot -> run to completion -> assert invariants.
+
+The **whole-process crash model**: when a :class:`~.faults.CrashPoint`
+fires, every in-memory component object (Driver, Voter, Decider,
+Executor, the bus *instance*) is discarded — exactly what SIGKILL does.
+Only two things survive, the same two things that survive a real crash:
+
+* the **durable store** (the SQLite file, the KV segment directory, the
+  bus server's backend) — reopened fresh in phase 2;
+* the **environment** (``env`` dict standing in for the external world
+  the Executor mutates) — effects already applied stay applied.
+
+Invariants asserted after recovery, for every point:
+
+1. **at-most-once**: each workload step's env effect applied exactly once
+   (``count[step] == 1``) — the §3.2 hole (effect applied, Result lost)
+   must be absorbed by probing, never by re-running;
+2. **nothing lost**: every step completed; a committed-but-unexecuted
+   intent's work always lands (under a re-issued intent if need be);
+3. **log integrity**: positions gapless from the trim base, no duplicate
+   Intent entries (network retries must dedupe), at most one Commit and
+   one terminal Result per intent, never both Commit and Abort;
+4. **silent replay**: the rebooted Driver reuses logged InfOuts — the
+   number of InfOut entries on the log equals the final Driver lineage's
+   inference count (skipped on trimmed logs, where old InfOuts are gone
+   by design and recovery is snapshot-anchored instead).
+
+The workload (:class:`ChaosPlanner` + ``chaos_work``/``chaos_probe``
+handlers) derives all decisions from the logged conversation history and
+the environment, never from planner-local state, so a planner rebuilt
+after a crash *continues* instead of restarting — and on ``recovering``
+context it probes the environment first (at-most-once discipline: never
+trust the log alone).
+
+Components are constructed directly with **stable ids** (``chaos-driver``
+etc.): Driver replay dedupe is lineage-scoped, so the rebooted process
+must present the same identity its predecessor logged under.
+
+``run_point(point, seed)`` is the single entry both ``tests/test_chaos``
+and ``tools/chaos.py`` call; the report it returns carries the
+:meth:`~.faults.FaultPlan.describe` schedule so any failure replays with
+one command.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Sequence
+
+from . import entries as E
+from . import faults
+from .acl import BusClient
+from .bus import AgentBus, KvBus, MemoryBus, SqliteBus, TrimmedError
+from .decider import Decider
+from .driver import Driver, Planner
+from .entries import PayloadType
+from .executor import Executor
+from .faults import CrashPoint, FaultError, FaultPlan, INJECTION_POINTS
+from .netbus import NetBus
+from .snapshot import DirSnapshotStore
+from .voter import RuleVoter
+
+#: the fixed workload: four env-mutating steps, done in order
+CHAOS_STEPS = ("alpha", "bravo", "charlie", "delta")
+
+#: stable component identities — replay dedupe is lineage-scoped, so the
+#: rebooted process must log under the same ids as its predecessor
+CHAOS_DRIVER = "chaos-driver"
+CHAOS_VOTER = "chaos-voter"
+CHAOS_DECIDER = "chaos-decider"
+CHAOS_EXEC = "chaos-exec"
+
+
+# ---------------------------------------------------------------------------
+# Workload: environment, handlers, planner
+# ---------------------------------------------------------------------------
+
+def fresh_env() -> Dict[str, Any]:
+    """The 'external world': survives crashes, counts every effect."""
+    return {"done": set(), "count": {}}
+
+
+def h_work(args: Dict[str, Any], env: Dict[str, Any]) -> Dict[str, Any]:
+    step = args["step"]
+    env["count"][step] = env["count"].get(step, 0) + 1
+    env["done"].add(step)
+    return {"step": step}
+
+
+def h_probe(args: Dict[str, Any], env: Dict[str, Any]) -> Dict[str, Any]:
+    """Exploratory intent: ask the environment what already happened."""
+    return {"done": sorted(env["done"])}
+
+
+CHAOS_HANDLERS = {"chaos_work": h_work, "chaos_probe": h_probe}
+
+
+class ChaosPlanner(Planner):
+    """Proposes one ``chaos_work`` step at a time.
+
+    The done-set is derived purely from the conversation history (step
+    Results and probe Results), never from planner-local counters, so a
+    fresh planner instance after a reboot continues where the lineage
+    left off. On a ``recovering`` context it proposes ``chaos_probe``
+    first: the log alone cannot distinguish executed-but-unrecorded from
+    never-executed (§3.2), only the environment can.
+    """
+
+    def __init__(self, steps: Sequence[str] = CHAOS_STEPS):
+        self.steps = list(steps)
+
+    def propose(self, context: Dict[str, Any]) -> Dict[str, Any]:
+        done = set()
+        for h in context.get("history", ()):
+            if h.get("role") != "result":
+                continue
+            body = h.get("body", {})
+            if not body.get("ok", False):
+                continue
+            value = body.get("value") or {}
+            if "step" in value:
+                done.add(value["step"])
+            done.update(value.get("done", ()))
+        if context.get("recovering"):
+            return {"intent": {"kind": "chaos_probe", "args": {}},
+                    "note": "environment state unknown; probe before "
+                            "re-running anything"}
+        todo = [s for s in self.steps if s not in done]
+        if not todo:
+            return {"done": True, "note": "all steps done"}
+        return {"intent": {"kind": "chaos_work", "args": {"step": todo[0]}},
+                "note": f"{len(todo)} steps remaining"}
+
+
+# ---------------------------------------------------------------------------
+# Component wiring
+# ---------------------------------------------------------------------------
+
+def build_components(bus: AgentBus, env: Dict[str, Any],
+                     announce_reboot: bool,
+                     driver_bus: Optional[AgentBus] = None,
+                     steps: Sequence[str] = CHAOS_STEPS) -> List[Any]:
+    """One full component set with stable ids. ``driver_bus`` lets the net
+    scenario put the Driver on a different client connection than the
+    voter/decider/executor (so a dropped push to one connection is
+    actually observable). On a reboot (``announce_reboot=True``) the
+    voter/decider replay dedupe is primed from the surviving log, exactly
+    like their snapshot ``bootstrap`` would — without it a rebooted voter
+    re-votes history and a rebooted decider re-commits it."""
+    executor = Executor(BusClient(bus, CHAOS_EXEC, "executor"), env,
+                        handlers=dict(CHAOS_HANDLERS),
+                        executor_id=CHAOS_EXEC,
+                        announce_reboot=announce_reboot)
+    driver = Driver(BusClient(driver_bus or bus, CHAOS_DRIVER, "driver"),
+                    ChaosPlanner(steps), driver_id=CHAOS_DRIVER)
+    voter = RuleVoter(BusClient(bus, CHAOS_VOTER, "voter"),
+                      voter_id=CHAOS_VOTER)
+    decider = Decider(BusClient(bus, CHAOS_DECIDER, "decider"),
+                      decider_id=CHAOS_DECIDER)
+    if announce_reboot:
+        base = bus.trim_base()
+        for e in voter.client.read(base, types=(PayloadType.VOTE,)):
+            voter._voted.add(e.body["intent_id"])
+        for e in decider.client.read(base, types=(PayloadType.COMMIT,
+                                                  PayloadType.ABORT)):
+            decider.decided.add(e.body["intent_id"])
+    return [driver, voter, decider, executor]
+
+
+def pump(parts: Sequence[Any], refresh=None, max_rounds: int = 500) -> int:
+    """Synchronous round-robin play until quiescence. ``refresh`` (net
+    scenario) is called when a round plays nothing — the sync-pump
+    equivalent of the stale-tail self-heal a blocked poller gets from
+    ``NetBus.stale_refresh_s`` — so a dropped push degrades to one extra
+    round, not a silent early quiesce. Returns rounds used."""
+    idle = 0
+    for rounds in range(1, max_rounds + 1):
+        played = 0
+        for p in parts:
+            played += p.play_available()
+        if played:
+            idle = 0
+            continue
+        if refresh is not None:
+            refresh()
+        idle += 1
+        if idle >= 2:
+            return rounds
+    return max_rounds
+
+
+def _kickoff(bus: AgentBus) -> None:
+    """Idempotent workload kickoff: the decider policy plus the user mail.
+    Re-run after a reboot so a crash that ate the kickoff append itself
+    (faults armed before it, as in the net scenario) is retried the way a
+    real client would retry an unacknowledged send."""
+    admin = BusClient(bus, "chaos-admin", "admin")
+    base = bus.trim_base()
+    have_policy = any(e.body.get("scope") == "decider"
+                      for e in admin.read(base, types=(PayloadType.POLICY,)))
+    if not have_policy:
+        admin.append(E.policy("decider", {"mode": "first_voter",
+                                          "voter_types": ["rule"]},
+                              issuer="chaos-admin"))
+    if not admin.read(base, types=(PayloadType.MAIL,)):
+        admin.append(E.mail("run the chaos steps", sender="chaos"))
+
+
+def _make_bus(backend: str, root: str) -> AgentBus:
+    if backend == "sqlite":
+        return SqliteBus(os.path.join(root, "bus.sqlite"))
+    if backend == "kv":
+        return KvBus(os.path.join(root, "kv"))
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# Invariants
+# ---------------------------------------------------------------------------
+
+def check_invariants(bus: AgentBus, env: Dict[str, Any],
+                     steps: Sequence[str], driver: Optional[Driver],
+                     trimmed: bool = False) -> List[str]:
+    """Return violation strings (empty = the run upheld the contract)."""
+    v: List[str] = []
+    base = bus.trim_base()
+    tail = bus.tail()
+    try:
+        entries = bus.read(base)
+    except TrimmedError as te:
+        return [f"trim base moved during the check: {te}"]
+    positions = [e.position for e in entries]
+    if positions != list(range(base, base + len(positions))):
+        v.append(f"positions not gapless from base {base}: "
+                 f"{positions[:12]}...")
+    if positions and positions[-1] + 1 != tail:
+        v.append(f"tail() {tail} != last position {positions[-1]} + 1")
+
+    intents: Dict[str, List[Dict[str, Any]]] = {}
+    commits: Dict[str, int] = {}
+    aborts: Dict[str, int] = {}
+    results: Dict[str, int] = {}
+    infouts = 0
+    for e in entries:
+        b = e.body
+        if e.type == PayloadType.INTENT:
+            intents.setdefault(b["intent_id"], []).append(dict(b))
+        elif e.type == PayloadType.COMMIT:
+            commits[b["intent_id"]] = commits.get(b["intent_id"], 0) + 1
+        elif e.type == PayloadType.ABORT:
+            aborts[b["intent_id"]] = aborts.get(b["intent_id"], 0) + 1
+        elif e.type == PayloadType.RESULT and not b.get("recovered"):
+            results[b["intent_id"]] = results.get(b["intent_id"], 0) + 1
+        elif e.type == PayloadType.INF_OUT:
+            infouts += 1
+
+    for iid, bodies in intents.items():
+        if len(bodies) > 1:
+            v.append(f"{len(bodies)} Intent entries for {iid} "
+                     "(retry did not dedupe)")
+    for iid, n in commits.items():
+        if n > 1:
+            v.append(f"{n} Commits for {iid}")
+        if iid in aborts:
+            v.append(f"both Commit and Abort for {iid}")
+    for iid, n in results.items():
+        if n > 1:
+            v.append(f"{n} Results for {iid}")
+
+    # at-most-once AND nothing lost, judged by the environment itself
+    for s in steps:
+        n = env["count"].get(s, 0)
+        if n != 1:
+            v.append(f"step {s!r} executed {n} times (want exactly 1)")
+
+    # a committed-but-unexecuted intent is legal only if its work landed
+    # under a re-issued intent (semantic recovery) — never silently lost
+    for iid in commits:
+        if iid in results or iid in aborts:
+            continue
+        body = (intents.get(iid) or [{}])[0]
+        if (body.get("kind") == "chaos_work"
+                and body.get("args", {}).get("step") not in env["done"]):
+            v.append(f"committed intent {iid} lost: its step never ran")
+
+    if driver is not None:
+        if not driver.done:
+            v.append("driver did not reach done")
+        if not trimmed and infouts != driver.n_inferences:
+            v.append(f"replay not silent: {infouts} InfOuts on the log vs "
+                     f"{driver.n_inferences} lineage inferences")
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Scenario runners
+# ---------------------------------------------------------------------------
+
+_CAUGHT = (FaultError, ConnectionError, TimeoutError, OSError)
+
+
+def _report(inj: faults.FaultInjector, crashed: Optional[BaseException],
+            violations: List[str]) -> Dict[str, Any]:
+    return {"fired": [a.describe() for a in inj.fired],
+            "crashed": repr(crashed) if crashed is not None else None,
+            "violations": violations}
+
+
+def run_agent(plan: FaultPlan, backend: str, root: str,
+              steps: Sequence[str] = CHAOS_STEPS) -> Dict[str, Any]:
+    """Durable-backend agent scenario: crash anywhere in the pipeline,
+    reboot the whole component set against the reopened store."""
+    env = fresh_env()
+    bus = _make_bus(backend, root)
+    _kickoff(bus)
+    crashed = None
+    inj = faults.install(plan)
+    try:
+        pump(build_components(bus, env, announce_reboot=False, steps=steps))
+    except FaultError as ex:
+        crashed = ex
+    finally:
+        faults.uninstall()
+    # whole-process reboot: durable store + env survive, nothing else
+    bus2 = _make_bus(backend, root)
+    _kickoff(bus2)
+    parts2 = build_components(bus2, env, announce_reboot=True, steps=steps)
+    pump(parts2)
+    return _report(inj, crashed,
+                   check_invariants(bus2, env, steps, parts2[0]))
+
+
+def run_trim(plan: FaultPlan, backend: str, root: str,
+             steps: Sequence[str] = CHAOS_STEPS) -> Dict[str, Any]:
+    """Crash inside ``trim``: run the workload clean, checkpoint every
+    component, kill the trimmer at the point, then reboot snapshot-
+    anchored. Recovery must replay silently — the only new work after the
+    reboot is the recovery probe."""
+    env = fresh_env()
+    bus = _make_bus(backend, root)
+    _kickoff(bus)
+    parts = build_components(bus, env, announce_reboot=False, steps=steps)
+    pump(parts)
+    snaps = DirSnapshotStore(os.path.join(root, "snaps"))
+    for p in parts:
+        p.checkpoint(snaps)
+    results = [e.position
+               for e in bus.read(0, types=(PayloadType.RESULT,))]
+    target = results[len(results) // 2] + 1
+    tail_before = bus.tail()
+    crashed = None
+    inj = faults.install(plan)
+    try:
+        bus.trim(target)
+    except FaultError as ex:
+        crashed = ex
+    finally:
+        faults.uninstall()
+
+    bus2 = _make_bus(backend, root)
+    v: List[str] = []
+    base = bus2.trim_base()
+    if base > target:
+        v.append(f"trim base {base} overshot the requested target {target}")
+    if bus2.tail() != tail_before:
+        v.append(f"tail changed across the trim crash: "
+                 f"{tail_before} -> {bus2.tail()}")
+    parts2 = build_components(bus2, env, announce_reboot=True, steps=steps)
+    for p in parts2:
+        p.bootstrap(snaps)
+    pump(parts2)
+    v += check_invariants(bus2, env, steps, parts2[0], trimmed=True)
+    # silent replay, concretely: no work intent was re-issued — the only
+    # intents above the pre-crash tail belong to the recovery probe
+    for e in bus2.read(tail_before, types=(PayloadType.INTENT,)):
+        if e.body.get("kind") != "chaos_probe":
+            v.append(f"reboot re-issued work after trim: {e.body}")
+    return _report(inj, crashed, v)
+
+
+def run_compact(plan: FaultPlan, root: str,
+                steps: Sequence[str] = CHAOS_STEPS) -> Dict[str, Any]:
+    """Crash inside KvBus ``compact``: the logical log must be byte-for-
+    byte unaffected (compaction only re-shards storage), and a shadowed
+    tail segment left by a dead compactor must be dropped on reopen."""
+    env = fresh_env()
+    bus = _make_bus("kv", root)
+    _kickoff(bus)
+    pump(build_components(bus, env, announce_reboot=False, steps=steps))
+
+    def snap(b: AgentBus):
+        import json
+        return [(e.position, e.type.value,
+                 json.dumps(e.body, sort_keys=True))
+                for e in b.read(b.trim_base())]
+
+    before = snap(bus)
+    crashed = None
+    inj = faults.install(plan)
+    try:
+        bus.compact()
+    except FaultError as ex:
+        crashed = ex
+    finally:
+        faults.uninstall()
+    bus2 = _make_bus("kv", root)
+    v: List[str] = []
+    if snap(bus2) != before:
+        v.append("entries changed across the compaction crash")
+    parts2 = build_components(bus2, env, announce_reboot=True, steps=steps)
+    pump(parts2)
+    v += check_invariants(bus2, env, steps, parts2[0])
+    return _report(inj, crashed, v)
+
+
+def _net_clients(host: str, port: int):
+    a = NetBus((host, port), client_id="chaos-conn-a",
+               connect_timeout=5.0, request_timeout=5.0)
+    b = NetBus((host, port), client_id="chaos-conn-b",
+               connect_timeout=5.0, request_timeout=5.0)
+    # tighten the lost-push self-heal so a dropped wakeup costs the test
+    # milliseconds, not the production 30 s
+    a.stale_refresh_s = b.stale_refresh_s = 0.2
+    return a, b
+
+
+def _close_quietly(*closeables) -> None:
+    for c in closeables:
+        if c is None:
+            continue
+        try:
+            c.close()
+        except Exception:  # noqa: BLE001 - teardown best-effort
+            pass
+
+
+def run_net(plan: FaultPlan, root: str,
+            steps: Sequence[str] = CHAOS_STEPS) -> Dict[str, Any]:
+    """Networked scenario: BusServer over a shared backend, the Driver on
+    one client connection and voter/decider/executor on another (dropped
+    pushes to either side are then observable). Faults are armed *before*
+    the clients connect so hello/connect-path points count traversals.
+    Transparent faults (disconnects the client retry absorbs, dropped or
+    delayed pushes) complete phase 1; a crash or a dead server incarnation
+    aborts it, after which the server is restarted on the same port and
+    the component set rebooted — clients reconnect and must dedupe."""
+    from repro.launch.bus_server import BusServer
+    env = fresh_env()
+    backend = MemoryBus()
+    server = BusServer(backend).start()
+    host, port = server.address
+    crashed = None
+    a = b = None
+    inj = faults.install(plan)
+    try:
+        a, b = _net_clients(host, port)
+        _kickoff(b)
+        parts = build_components(b, env, announce_reboot=False,
+                                 driver_bus=a, steps=steps)
+        pump(parts, refresh=lambda: (a.tail(refresh=True),
+                                     b.tail(refresh=True)))
+    except _CAUGHT as ex:
+        crashed = ex
+    finally:
+        faults.uninstall()
+    _close_quietly(a, b)
+    if server._closed:  # dead incarnation: restart on the same address
+        server = BusServer(backend, host, port).start()
+    a2 = b2 = None
+    try:
+        a2, b2 = _net_clients(host, port)
+        _kickoff(b2)
+        parts2 = build_components(b2, env, announce_reboot=True,
+                                  driver_bus=a2, steps=steps)
+        pump(parts2, refresh=lambda: (a2.tail(refresh=True),
+                                      b2.tail(refresh=True)))
+        violations = check_invariants(backend, env, steps, parts2[0])
+    finally:
+        _close_quietly(a2, b2, server)
+    return _report(inj, crashed, violations)
+
+
+def run_unit(plan: FaultPlan, root: str = "",
+             steps: Sequence[str] = CHAOS_STEPS) -> Dict[str, Any]:
+    """MemoryBus point: no durability story — just assert the crash is
+    atomic (log untouched) and one-shot (the retry succeeds)."""
+    bus = MemoryBus()
+    ok_appends = 0
+    crashed = None
+    inj = faults.install(plan)
+    try:
+        for i in range(4):
+            try:
+                bus.append(E.mail(f"m{i}"))
+                ok_appends += 1
+            except CrashPoint as ex:
+                crashed = ex
+    finally:
+        faults.uninstall()
+    v: List[str] = []
+    if bus.tail() != ok_appends:
+        v.append(f"tail {bus.tail()} != {ok_appends} acknowledged appends")
+    if [e.position for e in bus.read(0)] != list(range(ok_appends)):
+        v.append("positions not contiguous after the aborted append")
+    return _report(inj, crashed, v)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def run_point(point: str, seed: int = 0,
+              root: Optional[str] = None) -> Dict[str, Any]:
+    """Run the crash-point cycle for one registered injection point.
+
+    ``seed`` varies the traversal the fault fires on (``at_hit``), so the
+    same point can be killed at different appends/commits across CI runs;
+    ``seed=0`` always fires on the first traversal (guaranteed coverage).
+    A fault whose traversal is never reached simply doesn't fire — the
+    report's ``fired`` list says what actually went off.
+    """
+    spec = INJECTION_POINTS.get(point)
+    if spec is None:
+        raise KeyError(f"unregistered injection point {point!r}")
+    op = spec.ops[0]
+    # bus-level append points see ~6 traversals per step cycle; give the
+    # seed a wider dial there so deep appends (votes, commits, results)
+    # get killed too
+    at_hit = 1 + (seed % (6 if ".append." in point else 3))
+    arg = 0.05 if op == "delay" else 0.0
+    plan = FaultPlan.single(point, op=op, at_hit=at_hit, arg=arg, seed=seed)
+    own_root = root is None
+    if own_root:
+        root = tempfile.mkdtemp(prefix="chaos-")
+    try:
+        sc = spec.scenario
+        if sc == "agent:sqlite":
+            rep = run_agent(plan, "sqlite", root)
+        elif sc == "agent:kv":
+            rep = run_agent(plan, "kv", root)
+        elif sc == "trim:sqlite":
+            rep = run_trim(plan, "sqlite", root)
+        elif sc == "trim:kv":
+            rep = run_trim(plan, "kv", root)
+        elif sc == "compact:kv":
+            rep = run_compact(plan, root)
+        elif sc == "net":
+            rep = run_net(plan, root)
+        else:
+            rep = run_unit(plan, root)
+    finally:
+        if own_root:
+            shutil.rmtree(root, ignore_errors=True)
+    rep.update({"point": point, "seed": seed, "scenario": spec.scenario,
+                "op": op, "at_hit": at_hit, "plan": plan.describe(),
+                "ok": not rep["violations"]})
+    return rep

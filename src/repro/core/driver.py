@@ -21,6 +21,7 @@ from typing import Any, Dict, List, Optional
 from . import entries as E
 from .acl import BusClient
 from .entries import Entry, PayloadType
+from .faults import fault_point
 from .lifecycle import Recoverable
 from .policy import PolicyState
 
@@ -220,6 +221,7 @@ class Driver(Recoverable):
             plan = self._logged_infouts[self.n_inferences]
         else:
             self.client.append(E.inf_in(ctx, self.driver_id))
+            fault_point("driver.infer.post_infin")
             t0 = time.monotonic()
             plan = self.planner.propose(ctx)
             self.inference_latency_s += time.monotonic() - t0
@@ -241,9 +243,15 @@ class Driver(Recoverable):
         else:
             # Deterministic lineage-scoped intent identity, so a replayed
             # Driver regenerates identical ids (dedup across recovery).
+            # Plan-level extras (saga_id, compensates, ...) ride into the
+            # Intent body so flags like the compensation marker survive
+            # the planner -> log hop.
+            extra = {k: v for k, v in it.items()
+                     if k not in ("kind", "args", "intent_id")}
             pay = E.intent(it["kind"], it.get("args", {}), self.driver_id,
                            intent_id=it.get("intent_id")
-                           or f"{self.driver_id}-i{self.n_intents}")
+                           or f"{self.driver_id}-i{self.n_intents}",
+                           **extra)
             body = pay.body
             pending.append(pay)
             # Record in the replay list at issue time: the harvest cursor
@@ -252,11 +260,13 @@ class Driver(Recoverable):
             # a suffix-harvested list would mis-index against n_intents.
             self._logged_intents.append(body)
         if pending:
+            fault_point("driver.intent.pre_append")
             # One batch (one transaction / segment): the InfOut and its
             # Intent land atomically and in order, halving the per-commit
             # cost on durable backends.
             self.client.append_many(pending)
             self._infout_scan = self.client.tail()
+            fault_point("driver.intent.post_append")
         self.n_intents += 1
         self.history.append({"role": "intent", "body": body})
         self.inflight_intent = body["intent_id"]

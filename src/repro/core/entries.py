@@ -140,6 +140,47 @@ def intent(kind: str, args: Dict[str, Any], driver_id: str,
         "driver_id": driver_id, **extra})
 
 
+def comp_intent_id(of_intent_id: str, attempt: int = 1) -> str:
+    """Deterministic id of the ``attempt``-th compensation of an intent.
+    Determinism makes a re-planned compensation a duplicate the Decider
+    dedupes instead of a second saga; the attempt suffix exists for the one
+    case that must NOT dedupe — a compensating executor that crashed after
+    commit but before its Result, whose retry needs a fresh decision."""
+    if attempt <= 1:
+        return f"comp-{of_intent_id}"
+    return f"comp-{of_intent_id}.r{attempt}"
+
+
+def compensation(kind: str, of_intent_id: str, original_args: Dict[str, Any],
+                 original_result: Optional[Dict[str, Any]], driver_id: str,
+                 saga_id: Optional[str] = None, attempt: int = 1,
+                 **extra) -> Payload:
+    """Compensation-flagged Intent (saga recovery, arXiv 2605.03409).
+
+    Deliberately an ordinary ``Intent`` entry — the codec's type tags are
+    append-only declaration indices, so a new ``PayloadType`` would be a
+    wire-format break — flagged by the ``compensates`` body field. It flows
+    through the normal Intent→Vote→Commit pipeline (visible before
+    execution, stoppable by voters) and the Executor dispatches it to the
+    registered *compensator* for ``kind`` with
+    ``args = {"of", "args", "result"}``: the compensated intent's id, its
+    original args, and its original result value.
+    """
+    body_extra: Dict[str, Any] = {"compensates": of_intent_id, **extra}
+    if saga_id is not None:
+        body_extra["saga_id"] = saga_id
+    return intent(kind,
+                  {"of": of_intent_id, "args": dict(original_args),
+                   "result": original_result},
+                  driver_id, intent_id=comp_intent_id(of_intent_id, attempt),
+                  **body_extra)
+
+
+def is_compensation(body: Dict[str, Any]) -> bool:
+    """True for the body of a Compensation-flagged Intent (or its Result)."""
+    return bool(body.get("compensates"))
+
+
 def vote(intent_id: str, voter_type: str, voter_id: str, approve: bool,
          reason: str = "", **extra) -> Payload:
     return Payload(PayloadType.VOTE, {

@@ -23,7 +23,9 @@ from typing import Any, Callable, Dict, Optional, Set
 
 from . import entries as E
 from .acl import BusClient
+from .bus import TrimmedError
 from .entries import Entry, PayloadType
+from .faults import fault_point
 from .lifecycle import Recoverable
 from .policy import PolicyState
 
@@ -35,10 +37,18 @@ class Executor(Recoverable):
     def __init__(self, client: BusClient, env: Any,
                  handlers: Optional[Dict[str, Handler]] = None,
                  executor_id: Optional[str] = None,
-                 announce_reboot: bool = False):
+                 announce_reboot: bool = False,
+                 compensators: Optional[Dict[str, Handler]] = None):
         self.client = client
         self.env = env
         self.handlers: Dict[str, Handler] = dict(handlers or {})
+        #: kind -> compensator, applied to Compensation-flagged intents
+        #: (saga recovery, ROADMAP 3(a)): same signature as a handler, but
+        #: ``args`` is ``{"of", "args", "result"}`` — the compensated
+        #: intent's id, original args, and original result value. MUST be
+        #: idempotent: a compensating executor that crashes between effect
+        #: and Result is retried under a fresh attempt id.
+        self.compensators: Dict[str, Handler] = dict(compensators or {})
         self.executor_id = executor_id or f"executor-{E.new_id()}"
         self.cursor = 0
         self.policy = PolicyState()
@@ -56,11 +66,20 @@ class Executor(Recoverable):
         log so it knows which intents already have Results (at-most-once).
         The scan is anchored at the trim base: the CheckpointCoordinator
         guarantees every committed-but-unexecuted intention survives a
-        trim, so nothing below the base can still need execution.
+        trim, so nothing below the base can still need execution. A trim
+        racing the scan surfaces as ``TrimmedError``; the reboot re-anchors
+        at the advanced base and rescans (fresh maps — a partial scan may
+        mix pre- and post-trim views) instead of dying on arrival.
         """
-        for e in self.client.read(self.client.trim_base(),
-                                  types=(PayloadType.INTENT,
-                                         PayloadType.RESULT)):
+        base = self.client.trim_base()
+        while True:
+            try:
+                scanned = self.client.read(
+                    base, types=(PayloadType.INTENT, PayloadType.RESULT))
+                break
+            except TrimmedError as te:
+                base = te.base  # concurrent trim: re-anchor and rescan
+        for e in scanned:
             if e.type == PayloadType.INTENT:
                 self.intents[e.body["intent_id"]] = e.body
             elif not e.body.get("recovered"):
@@ -73,6 +92,11 @@ class Executor(Recoverable):
 
     def register(self, kind: str, handler: Handler) -> None:
         self.handlers[kind] = handler
+
+    def register_compensator(self, kind: str, handler: Handler) -> None:
+        """Register the semantic-undo for ``kind`` intents (must be
+        idempotent; see ``compensators``)."""
+        self.compensators[kind] = handler
 
     # -- snapshot (replayable bookkeeping only; effects live in the env) ----
     def to_snapshot(self) -> Dict[str, Any]:
@@ -123,14 +147,24 @@ class Executor(Recoverable):
         if intent is None:
             return  # commit for a fenced driver's intent we never recorded
         self.executed.add(iid)
+        fault_point("exec.commit.pre_effect")
         self._execute(intent)
 
     def _execute(self, intent: Dict[str, Any]) -> None:
         kind, args, iid = intent["kind"], intent.get("args", {}), intent["intent_id"]
-        handler = self.handlers.get(kind)
+        comp_of = intent.get("compensates")
+        if comp_of:
+            # Compensation-flagged intent: dispatch to the registered
+            # semantic-undo, same at-most-once discipline as a handler.
+            handler = self.compensators.get(kind)
+            missing = f"no compensator for kind {kind!r}"
+        else:
+            handler = self.handlers.get(kind)
+            missing = f"no handler for kind {kind!r}"
+        fault_point("exec.effect.pre_handler")
         t0 = time.monotonic()
         if handler is None:
-            ok, value = False, {"error": f"no handler for kind {kind!r}"}
+            ok, value = False, {"error": missing}
         else:
             try:
                 # Handlers get a private deep copy: entry bodies read off
@@ -143,7 +177,14 @@ class Executor(Recoverable):
                 ok, value = False, {"error": repr(ex),
                                     "traceback": traceback.format_exc()[-2000:]}
         self.exec_latency_s += time.monotonic() - t0
-        self.client.append(E.result(iid, ok, value, self.executor_id))
+        # §3.2's window: the env effect happened, the Result has not been
+        # appended. A crash here is exactly what at-most-once + semantic
+        # recovery (and idempotent compensators) must absorb.
+        fault_point("exec.effect.post")
+        extra = {"compensates": comp_of} if comp_of else {}
+        self.client.append(E.result(iid, ok, value, self.executor_id,
+                                    **extra))
+        fault_point("exec.result.post_append")
 
     #: the only entry types ``handle`` reacts to (all within the executor
     #: role's read permissions).

@@ -1,0 +1,403 @@
+"""Deterministic fault injection for the chaos plane (ISSUE 9 tentpole).
+
+The paper's reliability claim (§3.2, §5.1) is that LogAct agents recover
+correctly from failures *anywhere* in the Intent→Vote→Commit→Execute
+pipeline. This module makes "anywhere" enumerable: the data plane is
+instrumented with **named injection points** (``fault_point("sqlite.\
+append.post_txn")`` etc.), and a seeded :class:`FaultPlan` schedules
+exactly which point fires, on which traversal, with which fault operation.
+The crash-point harness (``core.chaos`` / ``tools/chaos.py`` /
+``tests/test_chaos.py``) then drives every point through a
+kill-at-the-point → restart → assert-invariants cycle.
+
+Design rules:
+
+* **Zero cost when disarmed.** ``fault_point()`` is a module-level
+  function whose fast path is one global load and one ``is None`` test;
+  production code paths never pay for instrumentation they don't use.
+* **Deterministic.** A plan is either explicit (:meth:`FaultPlan.single`)
+  or derived from a seed (:meth:`FaultPlan.from_seed`); given the same
+  seed + workload, the same fault fires at the same traversal. Failures
+  print the seed + schedule so any run replays with one command.
+* **Faults are typed operations**, not free-form monkeypatching:
+
+  ====================  ====================================================
+  op                    semantics at the call site
+  ====================  ====================================================
+  ``crash``             raise :class:`CrashPoint` — simulated process death
+                        (the harness discards all in-memory state and
+                        reboots the component set; durable state survives)
+  ``torn``              the call site writes a *truncated* artifact (e.g. a
+                        partial segment object), then dies (``CrashPoint``)
+  ``drop``              the call site silently skips the operation (e.g. a
+                        push notification is never sent)
+  ``delay``             handled centrally: ``fire`` sleeps ``arg`` seconds
+  ``disconnect``        the call site closes its socket/connection
+  ``server_crash``      the BusServer incarnation dies (listener + conns
+                        closed); unlike ``crash`` it must not raise
+                        CrashPoint from a server thread where a defensive
+                        ``except Exception`` would swallow it
+  ``flap``              the call site responds with a perturbed value once
+                        (e.g. a bogus hello epoch, to exercise fencing)
+  ====================  ====================================================
+
+Injection points are **registered** in :data:`INJECTION_POINTS` with their
+location, legal ops, and harness scenario — that registry *is* the chaos
+matrix the tools enumerate. A ``fault_point`` call with an unregistered
+name is legal (it simply never matches a generated plan); registration is
+what makes a point part of the tested surface.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class FaultError(RuntimeError):
+    """Base class for injected faults."""
+
+
+class CrashPoint(FaultError):
+    """Simulated process death at a named injection point.
+
+    Deliberately NOT caught by any production code path: it must propagate
+    out of the component exactly like a SIGKILL would end the process, so
+    the harness can discard in-memory state and reboot. (Defensive
+    ``except Exception`` handlers on *server* threads are avoided by using
+    the ``server_crash`` op there instead.)
+    """
+
+    def __init__(self, point: str, hit: int) -> None:
+        super().__init__(f"injected crash at {point!r} (hit #{hit})")
+        self.point = point
+        self.hit = hit
+
+
+@dataclass(frozen=True)
+class FaultAction:
+    """One scheduled fault: fire ``op`` on the ``at_hit``-th traversal of
+    ``point`` (1-based). ``arg`` is op-specific: seconds for ``delay``,
+    the keep-fraction for ``torn`` writes."""
+
+    point: str
+    op: str
+    at_hit: int = 1
+    arg: float = 0.0
+
+    def describe(self) -> str:
+        extra = f" arg={self.arg}" if self.arg else ""
+        return f"{self.point} op={self.op} at_hit={self.at_hit}{extra}"
+
+
+#: ops every registered point must choose from
+_OPS = ("crash", "torn", "drop", "delay", "disconnect", "server_crash",
+        "flap")
+
+
+@dataclass(frozen=True)
+class PointSpec:
+    """Registry record for one injection point: where it lives, which ops
+    are legal there, which harness scenario exercises it, and what the
+    fault means physically."""
+
+    ops: Tuple[str, ...]
+    scenario: str
+    doc: str
+
+    def __post_init__(self) -> None:
+        assert all(op in _OPS for op in self.ops), self.ops
+
+
+#: name -> spec. This registry IS the chaos matrix (``tools/chaos.py
+#: --list`` prints it; ``tests/test_chaos.py`` parametrizes over it).
+INJECTION_POINTS: Dict[str, PointSpec] = {
+    # -- SqliteBus ----------------------------------------------------------
+    "sqlite.append.pre_txn": PointSpec(
+        ("crash",), "agent:sqlite",
+        "group-commit leader dies after position assignment, before the "
+        "INSERT transaction — nothing durable"),
+    "sqlite.append.mid_txn": PointSpec(
+        ("crash",), "agent:sqlite",
+        "leader dies inside the transaction (after executemany, before "
+        "COMMIT) — SQLite rolls the whole group back"),
+    "sqlite.append.post_txn": PointSpec(
+        ("crash",), "agent:sqlite",
+        "leader dies after COMMIT, before signalling waiters — entries "
+        "durable but the appender never learns its positions"),
+    "sqlite.trim.pre_txn": PointSpec(
+        ("crash",), "trim:sqlite",
+        "coordinator dies before the trim transaction — log unchanged"),
+    "sqlite.trim.mid_txn": PointSpec(
+        ("crash",), "trim:sqlite",
+        "coordinator dies between the DELETE and the meta base update — "
+        "one transaction, so both roll back"),
+    "sqlite.trim.post_txn": PointSpec(
+        ("crash",), "trim:sqlite",
+        "coordinator dies after the trim committed, before cache purge"),
+    # -- KvBus --------------------------------------------------------------
+    "kv.append.pre_stage": PointSpec(
+        ("crash",), "agent:kv",
+        "appender dies before staging the segment temp file"),
+    "kv.append.torn_stage": PointSpec(
+        ("torn",), "agent:kv",
+        "power cut mid-PUT of the staging temp file: a truncated .tmp is "
+        "left behind, never published (CAS link never ran)"),
+    "kv.append.pre_link": PointSpec(
+        ("crash",), "agent:kv",
+        "segment fully staged; appender dies before the os.link CAS "
+        "publish — orphan temp file, nothing visible"),
+    "kv.append.torn_publish": PointSpec(
+        ("torn",), "agent:kv",
+        "torn PUBLISHED object (data loss at the store after ack-less "
+        "publish): a truncated seg-*.bin exists under the final name and "
+        "must be quarantined, never served"),
+    "kv.append.post_link": PointSpec(
+        ("crash",), "agent:kv",
+        "appender dies after the CAS link published the segment, before "
+        "updating its in-memory index — durable but unacknowledged"),
+    "kv.trim.pre_marker": PointSpec(
+        ("crash",), "trim:kv",
+        "coordinator dies before the trim-base marker write — log "
+        "unchanged"),
+    "kv.trim.post_marker": PointSpec(
+        ("crash",), "trim:kv",
+        "coordinator dies after the marker advanced, before any segment "
+        "unlink — garbage segments below the base, invisible to reads"),
+    "kv.compact.pre_replace": PointSpec(
+        ("crash",), "compact:kv",
+        "compactor dies after staging the merged object, before the "
+        "atomic replace — orphan temp file, log unchanged"),
+    "kv.compact.post_replace": PointSpec(
+        ("crash",), "compact:kv",
+        "compactor dies after the merged object replaced the first "
+        "segment, before unlinking the rest — the tail segments are "
+        "shadowed (their ranges duplicated) and must be dropped on "
+        "reopen"),
+    # -- NetBus client ------------------------------------------------------
+    "net.client.append.pre_send": PointSpec(
+        ("disconnect",), "net",
+        "client connection dies before the append request is sent — "
+        "clean retry, nothing reached the server"),
+    "net.client.append.post_send": PointSpec(
+        ("disconnect",), "net",
+        "client connection dies after the append request was sent, "
+        "before the reply — the server appended; the retry must dedupe "
+        "on the batch token"),
+    "net.client.read.post_send": PointSpec(
+        ("disconnect",), "net",
+        "client connection dies after a read request was sent — reads "
+        "are idempotent, the retry just re-reads"),
+    "net.client.crash.pre_append": PointSpec(
+        ("crash",), "net",
+        "client process dies just before issuing an append — full "
+        "component reboot against the still-running server"),
+    # -- BusServer ----------------------------------------------------------
+    "net.server.push.drop": PointSpec(
+        ("drop",), "net",
+        "an append-notify push fan-out is lost in the network — "
+        "subscribers' push-fed tail views go stale and must self-heal"),
+    "net.server.push.delay": PointSpec(
+        ("delay",), "net",
+        "an append-notify push fan-out is delayed — wakeups are late but "
+        "nothing is lost"),
+    "net.server.reply.drop_append": PointSpec(
+        ("disconnect",), "net",
+        "the server appends, then the connection dies before the reply — "
+        "the client retry must hit the dedupe LRU, never double-append"),
+    "net.server.frame.reset_mid": PointSpec(
+        ("disconnect",), "net",
+        "connection reset mid-frame: the server sends a partial frame "
+        "(length prefix promising more bytes than arrive) then resets — "
+        "the client must treat it as a transport error and retry"),
+    "net.server.hello.flap": PointSpec(
+        ("flap",), "net",
+        "one hello is answered with a bogus epoch (epoch flap) — the "
+        "client must fence: re-seed its view instead of trusting caches"),
+    "net.server.append.crash_pre": PointSpec(
+        ("server_crash",), "net",
+        "server incarnation dies on an append before it reaches the "
+        "backend — nothing durable; clients reconnect to the restarted "
+        "incarnation and replay"),
+    "net.server.append.crash_post": PointSpec(
+        ("server_crash",), "net",
+        "server incarnation dies after the backend append, before the "
+        "reply/dedupe record — durable but unacknowledged; the new "
+        "incarnation's log already holds the entries"),
+    # -- Executor / Driver --------------------------------------------------
+    "exec.commit.pre_effect": PointSpec(
+        ("crash",), "agent:sqlite",
+        "executor dies after observing the Commit, before touching the "
+        "environment — committed-but-unexecuted; recovery must probe, "
+        "never blindly re-run"),
+    "exec.effect.pre_handler": PointSpec(
+        ("crash",), "agent:kv",
+        "executor dies inside _execute, before the handler ran — same "
+        "class as pre_effect but past the dedupe bookkeeping"),
+    "exec.effect.post": PointSpec(
+        ("crash",), "agent:sqlite",
+        "THE §3.2 hole: executor dies after the env effect, before the "
+        "Result append — at-most-once means the effect must never be "
+        "re-applied"),
+    "exec.result.post_append": PointSpec(
+        ("crash",), "agent:kv",
+        "executor dies after the Result append — fully recorded; replay "
+        "must be silent"),
+    "driver.infer.post_infin": PointSpec(
+        ("crash",), "agent:sqlite",
+        "driver dies after logging InfIn, before the planner ran — an "
+        "unpaired InfIn is harmless to replay"),
+    "driver.intent.pre_append": PointSpec(
+        ("crash",), "agent:kv",
+        "driver dies after the planner proposed, before the InfOut+Intent "
+        "batch append — the proposal is lost and re-derived"),
+    "driver.intent.post_append": PointSpec(
+        ("crash",), "agent:sqlite",
+        "driver dies after the InfOut+Intent batch landed — replay must "
+        "reuse the logged plan, not re-invoke the planner"),
+    # -- MemoryBus (not part of the durable matrix: a crash loses the whole
+    #    log by design; registered so in-process tests can still abort an
+    #    append deterministically) -------------------------------------------
+    "memory.append.crash": PointSpec(
+        ("crash",), "unit",
+        "in-memory append dies before mutating the list — no durability "
+        "story; exercised by unit tests only"),
+}
+
+
+class FaultPlan:
+    """An immutable schedule of :class:`FaultAction` s plus the seed that
+    produced it (``seed=None`` for hand-built plans)."""
+
+    def __init__(self, actions: Sequence[FaultAction],
+                 seed: Optional[int] = None) -> None:
+        self.actions: Tuple[FaultAction, ...] = tuple(actions)
+        self.seed = seed
+        for a in self.actions:
+            spec = INJECTION_POINTS.get(a.point)
+            if spec is not None and a.op not in spec.ops:
+                raise ValueError(
+                    f"op {a.op!r} not legal at {a.point!r} "
+                    f"(legal: {spec.ops})")
+
+    @classmethod
+    def single(cls, point: str, op: Optional[str] = None, at_hit: int = 1,
+               arg: float = 0.0, seed: Optional[int] = None) -> "FaultPlan":
+        """One fault at one point. ``op=None`` uses the point's first
+        registered op."""
+        if op is None:
+            spec = INJECTION_POINTS.get(point)
+            if spec is None:
+                raise KeyError(f"unregistered injection point {point!r}")
+            op = spec.ops[0]
+        return cls([FaultAction(point, op, at_hit, arg)], seed=seed)
+
+    @classmethod
+    def from_seed(cls, seed: int, points: Optional[Sequence[str]] = None,
+                  n: int = 1, max_hit: int = 3) -> "FaultPlan":
+        """Derive ``n`` actions deterministically from ``seed``: pick
+        points (from ``points`` or the whole registry), a legal op each,
+        and a traversal count in ``[1, max_hit]``. Same seed => same
+        schedule, always."""
+        rng = random.Random(seed)
+        pool = sorted(points if points is not None else INJECTION_POINTS)
+        actions = []
+        for _ in range(n):
+            point = rng.choice(pool)
+            spec = INJECTION_POINTS.get(point)
+            op = rng.choice(spec.ops) if spec else "crash"
+            arg = 0.05 if op in ("delay", "torn") else 0.0
+            actions.append(FaultAction(point, op, rng.randint(1, max_hit),
+                                       arg))
+        return cls(actions, seed=seed)
+
+    def describe(self) -> str:
+        """Printable schedule — paste into a bug report, replay with
+        ``tools/chaos.py --point <p> --seed <s>``."""
+        head = f"FaultPlan(seed={self.seed})"
+        return "\n".join([head] + [f"  - {a.describe()}"
+                                   for a in self.actions])
+
+
+class FaultInjector:
+    """Thread-safe hit counting + one-shot firing for a :class:`FaultPlan`.
+
+    Each action fires at most once (a crash point reached again after the
+    reboot must not crash again — that is exactly the retry the harness is
+    verifying). ``fired`` records what actually went off, in order.
+    """
+
+    def __init__(self, plan: FaultPlan) -> None:
+        self.plan = plan
+        self.hits: Dict[str, int] = {}
+        self.fired: List[FaultAction] = []
+        self._armed: List[FaultAction] = list(plan.actions)
+        self._lock = threading.Lock()
+
+    def fire(self, point: str) -> Optional[FaultAction]:
+        """Record one traversal of ``point``; fire the matching armed
+        action if this is its hit. ``crash`` raises :class:`CrashPoint`
+        and ``delay`` sleeps here (centralized); every other op returns
+        the action for the call site to enact."""
+        with self._lock:
+            hit = self.hits[point] = self.hits.get(point, 0) + 1
+            action = None
+            for a in self._armed:
+                if a.point == point and a.at_hit == hit:
+                    action = a
+                    self._armed.remove(a)
+                    self.fired.append(a)
+                    break
+        if action is None:
+            return None
+        if action.op == "crash":
+            raise CrashPoint(point, hit)
+        if action.op == "delay":
+            time.sleep(action.arg)
+            return None
+        return action
+
+
+#: the process-wide injector; None = disarmed (the production state).
+_INJECTOR: Optional[FaultInjector] = None
+
+
+def install(plan: FaultPlan) -> FaultInjector:
+    """Arm a plan process-wide. Returns the injector (for hit/fired
+    inspection). Call :func:`uninstall` — or use :func:`injected` — when
+    done; tests must never leak an armed injector."""
+    global _INJECTOR
+    _INJECTOR = FaultInjector(plan)
+    return _INJECTOR
+
+
+def uninstall() -> None:
+    global _INJECTOR
+    _INJECTOR = None
+
+
+class injected:
+    """Context manager: ``with injected(plan) as inj: ...``"""
+
+    def __init__(self, plan: FaultPlan) -> None:
+        self.plan = plan
+        self.injector: Optional[FaultInjector] = None
+
+    def __enter__(self) -> FaultInjector:
+        self.injector = install(self.plan)
+        return self.injector
+
+    def __exit__(self, *exc) -> None:
+        uninstall()
+
+
+def fault_point(name: str) -> Optional[FaultAction]:
+    """The instrumentation hook. Disarmed cost: one global load + one
+    ``is None`` branch. Armed: counts the traversal and fires the matching
+    action (see :meth:`FaultInjector.fire`)."""
+    inj = _INJECTOR
+    if inj is None:
+        return None
+    return inj.fire(name)

@@ -43,6 +43,8 @@ class IntentTrace:
     result: Optional[Dict[str, Any]] = None
     intent_ts: float = 0.0
     result_ts: float = 0.0
+    saga_id: Optional[str] = None      # multi-intent plan membership
+    compensates: Optional[str] = None  # Compensation flag: undone intent id
 
     @property
     def latency_s(self) -> float:
@@ -65,7 +67,9 @@ def _fold_trace(traces: Dict[str, IntentTrace], order: List[str],
         iid = b["intent_id"]
         if iid not in traces:
             traces[iid] = IntentTrace(iid, b["kind"], b.get("args", {}),
-                                      e.position, intent_ts=e.realtime_ts)
+                                      e.position, intent_ts=e.realtime_ts,
+                                      saga_id=b.get("saga_id"),
+                                      compensates=b.get("compensates"))
             order.append(iid)
     elif e.type == PayloadType.VOTE:
         t = traces.get(b["intent_id"])
@@ -92,6 +96,54 @@ def trace_intents(entries: Sequence[Entry]) -> List[IntentTrace]:
     for e in entries:
         _fold_trace(traces, order, e)
     return [traces[i] for i in order]
+
+
+def failed_sagas(traces: Sequence[IntentTrace]) -> Dict[str, Dict[str, Any]]:
+    """Group saga-flagged traces and report every *failed* saga.
+
+    A saga has failed when any member intent was aborted, produced a
+    failed (``ok=False``) Result, or was committed but never produced a
+    Result at all (its executor died mid-saga — effect state unknown).
+    For each failed saga, ``compensate`` lists the member traces whose
+    effects must be undone — the committed prefix whose handler succeeded
+    (or whose outcome is unknown) — in **reverse log order** and minus any
+    member an ``ok`` compensation Result already covers (so a compensating
+    executor crash never leads to double compensation). ``attempts`` maps
+    each of those ids to the number of compensation intents already issued
+    for it (the next attempt number is ``attempts[iid] + 1``).
+    """
+    sagas: Dict[str, List[IntentTrace]] = {}
+    comps: Dict[str, List[IntentTrace]] = {}  # compensated iid -> attempts
+    for t in traces:
+        if t.compensates:
+            comps.setdefault(t.compensates, []).append(t)
+        elif t.saga_id:
+            sagas.setdefault(t.saga_id, []).append(t)
+    out: Dict[str, Dict[str, Any]] = {}
+    for sid, members in sagas.items():
+        failed = [t for t in members
+                  if t.decision == "abort"
+                  or (t.result is not None and not t.result.get("ok"))
+                  or (t.decision == "commit" and t.result is None)]
+        if not failed:
+            continue
+        to_comp: List[IntentTrace] = []
+        for t in reversed(members):
+            if t.decision != "commit":
+                continue  # never committed -> no effect to undo
+            if t.result is not None and not t.result.get("ok"):
+                continue  # handler failed -> effect never applied
+            if any(c.result is not None and c.result.get("ok")
+                   for c in comps.get(t.intent_id, ())):
+                continue  # already compensated (at-most-once)
+            to_comp.append(t)
+        out[sid] = {
+            "failed": [t.intent_id for t in failed],
+            "compensate": to_comp,
+            "attempts": {t.intent_id: len(comps.get(t.intent_id, ()))
+                         for t in to_comp},
+        }
+    return out
 
 
 class BusObserver:

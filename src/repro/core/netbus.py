@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import itertools
 import json
+import random
 import socket
 import struct
 import threading
@@ -73,6 +74,7 @@ from . import codec as entry_codec
 from .acl import AclError
 from .bus import AgentBus, TrimmedError, TypeFilter
 from .entries import Entry, Payload, PayloadType, _json_default
+from .faults import fault_point
 
 #: Wire protocol version. Versioning rules (docs/bus-protocol.md): additive
 #: fields are minor and MUST be ignored by peers that don't know them;
@@ -214,7 +216,12 @@ class NetBus(AgentBus):
         self.role = role
         self._connect_timeout = connect_timeout
         self._request_timeout = request_timeout
-        self._io_lock = threading.Lock()       # connect + send serialization
+        # Connect + send serialization. Reentrant: _roundtrip's send-failure
+        # path calls _drop_connection while already holding the lock (the
+        # reader thread calls it bare) — with a plain Lock that self-
+        # deadlocks the client whenever a send fails synchronously, e.g.
+        # on a socket that died between requests (net.client.*.pre_send).
+        self._io_lock = threading.RLock()
         self._sock: Optional[socket.socket] = None
         self._pending: Dict[int, _Reply] = {}
         self._pending_lock = threading.Lock()
@@ -234,8 +241,24 @@ class NetBus(AgentBus):
         self._closed = False
         self.n_requests = 0      # round-trips issued (bench accounting)
         self.n_reconnects = 0    # successful re-handshakes after the first
+        #: per-instance RNG for decorrelated retry jitter (never seeded:
+        #: the whole point is that a fleet of clients desynchronizes)
+        self._jitter = random.Random()
+        #: force a tail refresh after this many seconds of waiting with no
+        #: push progress — self-healing against a lost append notification
+        #: (one dropped push would otherwise park a waiter forever). High
+        #: by default so an idle client stays at zero request cost.
+        self.stale_refresh_s = 30.0
         with self._io_lock:
             self._connect_locked(time.monotonic() + connect_timeout)
+
+    def _next_backoff(self, prev: float, cap: float = 0.5,
+                      base: float = 0.02) -> float:
+        """Decorrelated jitter (AWS-style): ``uniform(base, prev * 3)``
+        capped. Plain doubling from a constant base marches every client of
+        a restarted server through identical sleep ladders — a lockstep
+        reconnect storm; sampling the whole interval spreads them out."""
+        return min(cap, self._jitter.uniform(base, max(base, prev * 3)))
 
     # -- connection management ----------------------------------------------
     def _connect_locked(self, deadline: float) -> socket.socket:
@@ -262,7 +285,7 @@ class NetBus(AgentBus):
                 resp = recv_frame(sock)
             except (OSError, ConnectionError, ValueError):
                 time.sleep(min(backoff, max(0.0, deadline - time.monotonic())))
-                backoff = min(backoff * 2, 0.5)
+                backoff = self._next_backoff(backoff)
                 continue
             if not resp.get("ok"):
                 sock.close()
@@ -378,7 +401,7 @@ class NetBus(AgentBus):
                     raise ConnectionError(
                         f"bus request {op!r} failed: {e}") from e
                 time.sleep(backoff)
-                backoff = min(backoff * 2, 0.5)
+                backoff = self._next_backoff(backoff)
 
     def _roundtrip(self, op: str, params: Dict[str, Any], deadline: float,
                    payloads: Optional[Sequence[Payload]] = None,
@@ -387,6 +410,16 @@ class NetBus(AgentBus):
             sock = self._sock
             if sock is None:
                 sock = self._connect_locked(deadline)
+            act = fault_point(f"net.client.{op}.pre_send")
+            if act is not None:
+                # connection reset before the request left the client: the
+                # server never saw it, the retry is trivially safe
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                raise ConnectionError(
+                    f"injected reset before {op!r} send")
             rid = next(self._req_ids)
             reply = _Reply(sock)
             with self._pending_lock:
@@ -409,6 +442,15 @@ class NetBus(AgentBus):
                     self._pending.pop(rid, None)
                 self._drop_connection(sock)
                 raise ConnectionError(str(e)) from e
+            act = fault_point(f"net.client.{op}.post_send")
+            if act is not None:
+                # connection reset after the request left: the server may
+                # have processed it — only the batch token (append) or
+                # idempotence (read/tail) makes the retry safe
+                try:
+                    sock.close()
+                except OSError:
+                    pass
         if not reply.event.wait(max(0.0, deadline - time.monotonic())):
             with self._pending_lock:
                 self._pending.pop(rid, None)
@@ -436,6 +478,7 @@ class NetBus(AgentBus):
         positions instead of appending twice."""
         if not payloads:
             return []
+        fault_point("net.client.crash.pre_append")  # whole-process death
         batch = f"{self._batch_prefix}-{next(self._batch_ids)}"
         frame, _ = self._request_full("append", {"batch": batch},
                                       payloads=payloads)
@@ -498,8 +541,13 @@ class NetBus(AgentBus):
         """Block on the push-fed tail view (no polling, no request traffic
         while the log is idle). If the connection died, periodically force
         a reconnect via ``tail(refresh=True)`` so appends made while we
-        were disconnected are never slept through."""
+        were disconnected are never slept through. A *live* connection that
+        has made no progress for ``stale_refresh_s`` also forces one
+        refresh: a single dropped append-notify push (lossy network, server
+        under pressure) must degrade to one late poll, not a permanently
+        parked waiter."""
         deadline = None if timeout is None else time.monotonic() + timeout
+        stalled = 0.0
         while True:
             with self._push_cond:
                 if self._known_tail > known_tail:
@@ -513,6 +561,15 @@ class NetBus(AgentBus):
                 with self._push_cond:
                     if self._known_tail > known_tail:
                         return True
+            elif stalled >= self.stale_refresh_s and not self._closed:
+                stalled = 0.0
+                try:
+                    self.tail(refresh=True)  # lost-push self-heal
+                except (ConnectionError, TimeoutError):
+                    pass
+                with self._push_cond:
+                    if self._known_tail > known_tail:
+                        return True
             remaining = (None if deadline is None
                          else deadline - time.monotonic())
             if remaining is not None and remaining <= 0:
@@ -520,9 +577,11 @@ class NetBus(AgentBus):
                     return self._known_tail > known_tail
             # Bounded slices so a connection death mid-wait is noticed.
             chunk = 0.5 if remaining is None else min(0.5, remaining)
+            t0 = time.monotonic()
             with self._push_cond:
                 self._push_cond.wait_for(
                     lambda: self._known_tail > known_tail, chunk)
+            stalled += time.monotonic() - t0
 
     def server_wait(self, known_tail: int, timeout: float) -> bool:
         """The wire protocol's blocking ``wait`` op (server-side condition

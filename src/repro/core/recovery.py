@@ -24,8 +24,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from .bus import AgentBus
 from .driver import Planner
-from .entries import PayloadType
-from .introspect import TRACE_TYPES, trace_intents
+from .entries import PayloadType, comp_intent_id
+from .introspect import TRACE_TYPES, failed_sagas, trace_intents
 from .snapshot import SnapshotStore
 
 OptimizerHook = Callable[[Dict[str, Any]], Optional[Dict[str, Any]]]
@@ -57,6 +57,17 @@ class RecoveryPlanner(Planner):
       resume  -> re-issue the interrupted processing intent for the
                  remaining range only, with pathology fixes applied;
       verify  -> issue a verification intent over the full output.
+
+    Before any of those, a **compensate** phase (saga recovery, arXiv
+    2605.03409): if the original bus holds a failed multi-intent saga —
+    a ``saga_id``-flagged plan with an aborted member, a failed Result,
+    or a committed member whose Result never arrived — the planner first
+    emits one Compensation-flagged intent per committed-prefix member, in
+    reverse order (``plan_compensations``). Each compensation is an
+    ordinary Intent: it is voted on before it executes (stoppable), and
+    its deterministic id (``comp-<iid>``, retries ``comp-<iid>.rN``)
+    makes re-planning after a recovery crash dedupe instead of
+    double-compensating.
     """
 
     def __init__(self, original_bus: AgentBus,
@@ -95,9 +106,20 @@ class RecoveryPlanner(Planner):
         self.work_intent = next(
             (b for b in reversed(intents) if "work_range" in b.get("args", {})),
             None)
+        #: reverse-order compensation plans for failed sagas, emitted
+        #: one per propose() before the probe/resume/verify flow starts.
+        self.pending_compensations = plan_compensations(original_bus)
 
     # -- the "inference" over introspected history ---------------------------
     def propose(self, context: Dict[str, Any]) -> Dict[str, Any]:
+        if self.pending_compensations:
+            comp = self.pending_compensations.pop(0)
+            self.plan_notes.append(
+                f"compensate {comp['compensates']} "
+                f"(saga {comp.get('saga_id')})")
+            return {"intent": comp,
+                    "note": "Undo the committed prefix of the failed saga, "
+                            "most recent effect first"}
         if self.work_intent is None:
             return {"done": True, "note": "nothing to recover"}
         if self.phase == "probe":
@@ -138,6 +160,35 @@ class RecoveryPlanner(Planner):
             if fixed is not None:
                 args = fixed
         return args
+
+
+def plan_compensations(bus: AgentBus) -> List[Dict[str, Any]]:
+    """Plan-shaped compensation intents for every failed saga on ``bus``,
+    committed prefix in reverse log order (newest effect undone first —
+    the standard saga unwind). Each plan dict is what a ``Planner`` puts
+    under ``"intent"``: the Driver forwards the ``compensates``/``saga_id``
+    extras into the Intent body, the Executor dispatches on the flag to the
+    registered compensator. Members already covered by an ``ok``
+    compensation Result are excluded (``introspect.failed_sagas``), so a
+    recovery that crashes mid-unwind and re-plans never double-compensates;
+    members whose earlier compensation *committed but never resulted* get a
+    fresh attempt id (``comp-<iid>.rN``) the Decider will accept."""
+    traces = trace_intents(bus.read(bus.trim_base(), types=TRACE_TYPES))
+    plans: List[Dict[str, Any]] = []
+    fs = failed_sagas(traces)
+    for sid in sorted(fs):
+        info = fs[sid]
+        for t in info["compensate"]:
+            attempt = info["attempts"][t.intent_id] + 1
+            plans.append({
+                "kind": t.kind,
+                "args": {"of": t.intent_id, "args": dict(t.args),
+                         "result": (t.result or {}).get("value")},
+                "intent_id": comp_intent_id(t.intent_id, attempt),
+                "compensates": t.intent_id,
+                "saga_id": sid,
+            })
+    return plans
 
 
 def committed_unexecuted(bus: AgentBus) -> List[Dict[str, Any]]:

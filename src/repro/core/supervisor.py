@@ -13,7 +13,7 @@ from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 from .acl import BusClient
 from .bus import AgentBus
 from .entries import PayloadType, mail
-from .introspect import BusObserver, health_check
+from .introspect import BusObserver, failed_sagas, health_check
 from .snapshot import SnapshotStore
 
 
@@ -33,6 +33,8 @@ class Supervisor:
         self.sent_fixes: Dict[str, Set[str]] = {n: set() for n in self.workers}
         self.claimed: Dict[Tuple[int, int], str] = {}  # work_range -> worker
         self._claims_sent: Dict[str, Set[Tuple[int, int]]] = {}
+        self._sagas_flagged: Dict[str, Set[str]] = {n: set()
+                                                    for n in self.workers}
         self.mail_sent = 0
 
     def _observer_id(self, worker: str) -> str:
@@ -105,6 +107,40 @@ class Supervisor:
                     sender="supervisor", claims_snapshot=fresh))
                 seen.update(tuple(r) for r in fresh)
                 self.mail_sent += 1
+        # 3c) Saga failures: a definitively failed multi-intent plan (an
+        #     aborted member or a failed Result — commit-without-Result
+        #     alone may just be in flight) gets one advisory mail to the
+        #     owning worker naming the committed prefix to compensate
+        #     (ROADMAP 3(a); the worker's RecoveryPlanner does the unwind).
+        saga_failures: Dict[str, Dict[str, Any]] = {}
+        for name, obs in self._observers.items():
+            traces = {t.intent_id: t for t in obs.traces()}
+            fs = failed_sagas(obs.traces())
+            definite = {
+                sid: info for sid, info in fs.items()
+                if any(traces[i].decision == "abort"
+                       or traces[i].result is not None
+                       for i in info["failed"])}
+            if definite:
+                saga_failures[name] = {
+                    sid: {"failed": info["failed"],
+                          "compensate": [t.intent_id
+                                         for t in info["compensate"]]}
+                    for sid, info in definite.items()}
+            flagged = self._sagas_flagged.setdefault(name, set())
+            for sid, info in definite.items():
+                if sid in flagged:
+                    continue
+                comp_ids = [t.intent_id for t in info["compensate"]]
+                self.clients[name].append(mail(
+                    f"[supervisor] saga {sid} failed at "
+                    f"{info['failed']}; compensate committed prefix "
+                    f"in reverse order: {comp_ids}",
+                    sender="supervisor",
+                    saga={"saga_id": sid, "failed": info["failed"],
+                          "compensate": comp_ids}))
+                flagged.add(sid)
+                self.mail_sent += 1
         # 4) Health: flag stragglers relative to the fleet (reusing each
         #    worker's observer — no extra log reads).
         health = {}
@@ -115,4 +151,5 @@ class Supervisor:
         return {"summaries": summaries, "health": health,
                 "known_fixes": dict(self.known_fixes),
                 "claimed": {str(k): v for k, v in self.claimed.items()},
+                "saga_failures": saga_failures,
                 "mail_sent": self.mail_sent}

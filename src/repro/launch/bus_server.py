@@ -68,6 +68,7 @@ from repro.core import codec as entry_codec
 from repro.core.acl import AclError, ROLES
 from repro.core.bus import AgentBus, TrimmedError, make_bus
 from repro.core.entries import Payload, PayloadType
+from repro.core.faults import fault_point
 from repro.core.netbus import (MAX_FRAME_BYTES, PROTO_VERSION, recv_any,
                                recv_frame, send_binary_frame, send_frame)
 
@@ -227,6 +228,20 @@ class BusServer:
                     resp = {"ok": False, "error": "internal",
                             "message": f"{type(e).__name__}: {e}"}
                 if rid is not None:
+                    act = fault_point("net.server.frame.reset_mid")
+                    if act is not None:
+                        # connection reset mid-frame: a length prefix and a
+                        # few bytes of JSON escape, then the peer vanishes —
+                        # the client must treat the stream as dead, never
+                        # parse the fragment
+                        try:
+                            with conn._send_lock:
+                                conn.sock.sendall(
+                                    struct.pack(">I", 1 << 20) + b'{"part')
+                        except OSError:
+                            pass
+                        conn.close()
+                        continue
                     resp["id"] = rid
                     if out_blob is not None:
                         conn.send_binary(resp, out_blob)
@@ -272,6 +287,12 @@ class BusServer:
                 "max_frame": MAX_FRAME_BYTES}
         if conn.codec == "binary":
             resp["codec"] = "binary"
+        act = fault_point("net.server.hello.flap")
+        if act is not None:
+            # epoch flap: one hello reports a bogus incarnation id, as if
+            # the client raced a restart — it must fence (reseed its view)
+            # and still converge once the next hello tells the truth
+            resp["epoch"] = f"flap-{self.epoch[:8]}"
         return resp
 
     # -- op dispatch ---------------------------------------------------------
@@ -335,7 +356,19 @@ class BusServer:
                         break
                 ev.wait()  # first attempt still appending: await its result
         try:
+            act = fault_point("net.server.append.crash_pre")
+            if act is not None:
+                # whole-server death before the backend saw the batch
+                self.close()
+                raise ConnectionError("injected server crash (pre-append)")
             positions = self.bus.append_many(payloads)
+            act = fault_point("net.server.append.crash_post")
+            if act is not None:
+                # whole-server death after the append is durable but before
+                # the dedupe record and the reply: the entries exist, the
+                # client never learns — a successor incarnation serves them
+                self.close()
+                raise ConnectionError("injected server crash (post-append)")
             if key is not None:
                 with self._dedupe_lock:
                     self._dedupe[key] = positions
@@ -352,6 +385,13 @@ class BusServer:
         # the push fan-out — one less send and one less thread wakeup
         # contending with the waiters being woken.
         self._notify_append(positions[-1] + 1, exclude=conn)
+        act = fault_point("net.server.reply.drop_append")
+        if act is not None:
+            # the append committed, dedupe recorded, pushes fanned out —
+            # then the reply connection resets. The client's retry must be
+            # answered from the dedupe table, not appended again.
+            conn.close()
+            raise ConnectionError("injected reset before append reply")
         return {"ok": True, "positions": positions}
 
     def _op_read(self, conn: _Conn, frame: Dict[str, Any]):
@@ -399,6 +439,11 @@ class BusServer:
                 return
             self._tail = tail
             self._tail_cond.notify_all()
+        if fault_point("net.server.push.drop") is not None:
+            # the notification is lost in the network — server state already
+            # advanced; subscribers must self-heal (stale refresh), not hang
+            return
+        fault_point("net.server.push.delay")  # "delay" op sleeps in fire()
         event = {"event": "append", "tail": tail}
         with self._conns_lock:
             subs = [c for c in self._conns
