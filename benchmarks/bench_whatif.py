@@ -1,0 +1,125 @@
+"""Fork + what-if replay bench (ISSUE 10 acceptance).
+
+Part 1 — KV copy-on-write fork is O(segments above the fork point): on a
+>=10k-entry KV log, fork near the tail and compare against a full
+file-by-file copy of the same segment directory. Asserts (hard, not by
+eye): the child shares >= 90% of the parent's segment files (counted via
+``fork_stats`` AND by inode) and the fork is >= 10x faster than the copy.
+
+Part 2 — what-if replay cost: record the chaos demo swarm run, then
+replay it under a ``kind_denylist`` substitution and report the
+end-to-end fork+replay wall time (zero live inference calls, asserted).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from typing import List
+
+from repro.core import chaos
+from repro.core import entries as E
+from repro.core.bus import KvBus
+from repro.core.whatif import whatif
+
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+
+N_ENTRIES = 10_240 if QUICK else 40_960  # >=10k even in the CI smoke
+BATCH = 128                              # entries per segment
+PAD = "x" * 2048                         # realistic bodies (InfIn contexts,
+#                                          Results): copy cost is O(bytes),
+#                                          fork cost is O(segment count)
+REPS = 5                                 # best-of-N: one-shot timings on a
+#                                          shared CI box are too noisy for
+#                                          the hard speedup assert
+
+
+def bench_cow_fork(rows: List[str]) -> None:
+    top = tempfile.mkdtemp(prefix="bench-whatif-")
+    try:
+        root = os.path.join(top, "parent")
+        bus = KvBus(root)
+        for i in range(0, N_ENTRIES, BATCH):
+            bus.append_many([E.mail(f"e{i + j}", pad=PAD)
+                             for j in range(BATCH)])
+        n_segs = len([n for n in os.listdir(root) if n.startswith("seg-")])
+        at = N_ENTRIES - BATCH - BATCH // 2  # splits the 2nd-to-last segment
+
+        fork_s = float("inf")
+        for rep in range(REPS):
+            dst = os.path.join(top, f"fork-child-{rep}")
+            t0 = time.perf_counter()
+            child = bus.fork(at, dst)
+            fork_s = min(fork_s, time.perf_counter() - t0)
+            if rep < REPS - 1:
+                shutil.rmtree(dst)
+
+        copy_s = float("inf")
+        for rep in range(REPS):
+            dst = os.path.join(top, "full-copy")
+            t0 = time.perf_counter()
+            shutil.copytree(root, dst)
+            copy_s = min(copy_s, time.perf_counter() - t0)
+            shutil.rmtree(dst)
+
+        stats = child.fork_stats
+        share = stats["shared"] / max(1, stats["shared"] + stats["rewritten"])
+        # count the sharing independently of fork_stats: by inode
+        child_root = os.path.join(top, f"fork-child-{REPS - 1}")
+        linked = sum(
+            1 for n in os.listdir(child_root)
+            if n.startswith("seg-")
+            and os.stat(os.path.join(child_root, n)).st_nlink >= 2)
+        speedup = copy_s / max(fork_s, 1e-9)
+        print(f"kv fork @ {at}/{N_ENTRIES} ({n_segs} segments): "
+              f"{fork_s * 1e3:.2f} ms vs full copy {copy_s * 1e3:.2f} ms "
+              f"({speedup:.0f}x); shared {stats['shared']} "
+              f"(+{stats['rewritten']} rewritten, {linked} hard-linked) "
+              f"-> {share:.1%} shared")
+        assert share >= 0.90, f"shared ratio {share:.1%} < 90%"
+        assert linked == stats["shared"], "fork_stats disagrees with inodes"
+        assert speedup >= 10, f"fork only {speedup:.1f}x faster than copy"
+        rows.append(f"kv_fork_cow,{fork_s * 1e6:.1f},"
+                    f"{speedup:.0f}x_vs_copy_{share:.2f}_shared")
+        rows.append(f"kv_fork_full_copy,{copy_s * 1e6:.1f},baseline")
+    finally:
+        shutil.rmtree(top, ignore_errors=True)
+
+
+def bench_whatif_replay(rows: List[str]) -> None:
+    top = tempfile.mkdtemp(prefix="bench-whatif-replay-")
+    try:
+        bus = KvBus(os.path.join(top, "rec"))
+        env = chaos.fresh_env()
+        chaos._kickoff(bus)
+        chaos.pump(chaos.build_components(bus, env, announce_reboot=False))
+
+        t0 = time.perf_counter()
+        diff = whatif(bus, fork_at=2,
+                      policy={"voter:rule": {"kind_denylist": ["chaos_work"]}},
+                      handlers=dict(chaos.CHAOS_HANDLERS),
+                      env_factory=chaos.fresh_env)
+        replay_s = time.perf_counter() - t0
+        assert diff.live_inferences == 0
+        assert len(diff.flipped_to_abort) == len(chaos.CHAOS_STEPS)
+        print(f"what-if replay of {bus.tail()}-entry recording: "
+              f"{replay_s * 1e3:.2f} ms, {len(diff.flipped_to_abort)} "
+              f"decisions flipped, 0 live inference calls")
+        rows.append(f"whatif_replay,{replay_s * 1e6:.1f},"
+                    f"{len(diff.flipped_to_abort)}_flips_0_live_calls")
+    finally:
+        shutil.rmtree(top, ignore_errors=True)
+
+
+def main(rows: List[str]) -> None:
+    bench_cow_fork(rows)
+    bench_whatif_replay(rows)
+
+
+if __name__ == "__main__":
+    out: List[str] = []
+    main(out)
+    print()
+    for r in out:
+        print(r)

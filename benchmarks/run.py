@@ -11,6 +11,8 @@
   bench_voters    -> Fig 6 (Utility/ASR/latency/tokens per defense)
   bench_hotswap   -> Fig 7 (hot-swapping voters via policy entries)
   bench_recovery  -> Fig 8 (semantic recovery / health check / 290x fix)
+  bench_whatif    -> COW fork vs full copy + what-if replay cost
+                     (ISSUE 10 acceptance: >=90% shared, >=10x faster)
   bench_swarm     -> Fig 9 (supervisor swarm: +work, -tokens)
   bench_roofline  -> framework roofline table from dry-run artifacts
 
@@ -28,7 +30,8 @@ import time
 import traceback
 
 #: benches exercised by the --quick CI smoke (hermetic, seconds not minutes)
-QUICK = ("bus_throughput", "netbus", "hotswap", "recovery", "serving")
+QUICK = ("bus_throughput", "netbus", "hotswap", "recovery", "serving",
+         "whatif")
 
 
 def main(argv=None) -> None:
@@ -45,7 +48,7 @@ def main(argv=None) -> None:
 
     from . import (bench_bus_throughput, bench_hotswap, bench_netbus,
                    bench_overhead, bench_recovery, bench_roofline,
-                   bench_serving, bench_swarm, bench_voters)
+                   bench_serving, bench_swarm, bench_voters, bench_whatif)
     benches = [
         ("bus_throughput", bench_bus_throughput.main),
         ("netbus", bench_netbus.main),
@@ -54,6 +57,7 @@ def main(argv=None) -> None:
         ("voters", bench_voters.main),
         ("hotswap", bench_hotswap.main),
         ("recovery", bench_recovery.main),
+        ("whatif", bench_whatif.main),
         ("swarm", bench_swarm.main),
         ("roofline", bench_roofline.main),
     ]

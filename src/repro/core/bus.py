@@ -196,6 +196,27 @@ class AgentBus:
         compaction operations performed (0 = nothing to do)."""
         return 0
 
+    def fork(self, at_position: int,
+             path: Optional[str] = None) -> "AgentBus":
+        """Fork the log at ``at_position``: returns a NEW independent bus
+        holding this log's prefix ``[trim_base, at_position)`` —
+        byte-identical entries at the same positions with the same
+        timestamps, under the same trim base. Appends to either log after
+        the fork are invisible to the other (divergence isolation both
+        directions). ``at_position`` is clamped to ``tail()``; forking
+        below the trim base raises ``TrimmedError`` — that prefix was
+        checkpointed and trimmed away and cannot be forked.
+
+        ``path`` names the child's storage (a fresh file / directory for
+        the durable backends, on the same filesystem as the parent;
+        derived from the parent's path when omitted; ignored by
+        ``MemoryBus``). On ``KvBus`` the fork is **copy-on-write**:
+        segment objects wholly below the fork point are shared with the
+        parent by hard reference, only the boundary segment is rewritten
+        (see ``docs/whatif.md``). ``NetBus`` forwards a ``fork`` op to
+        the ``BusServer``, which forks its backing log server-side."""
+        raise NotImplementedError
+
     def wait(self, known_tail: int, timeout: Optional[float] = None) -> bool:
         """Block until ``tail() > known_tail`` (condition-variable wake on
         MemoryBus, adaptive backoff on the durable backends). Returns True
@@ -345,6 +366,26 @@ class MemoryBus(AgentBus):
                     del ents[:i]
                 self._trim_base = target
             return self._trim_base
+
+    def fork(self, at_position: int,
+             path: Optional[str] = None) -> "MemoryBus":
+        """Prefix-copy fork (``path`` ignored — the child is in-process).
+        Entry records are shared between parent and child: they are
+        logically immutable on every backend, so sharing is safe and the
+        copy is O(entries below the fork point) reference copies."""
+        with self._cond:
+            tail = self._trim_base + len(self._entries)
+            at = min(at_position, tail)
+            if at < self._trim_base:
+                raise TrimmedError(at_position, self._trim_base)
+            child = MemoryBus()
+            child._trim_base = self._trim_base
+            for e in self._entries[:at - self._trim_base]:
+                child._entries.append(e)
+                idx = child._by_type.setdefault(e.type, ([], []))
+                idx[0].append(e.position)
+                idx[1].append(e)
+            return child
 
     def _wait_for_append(self, known_tail: int, timeout: Optional[float]) -> bool:
         with self._cond:
@@ -647,6 +688,38 @@ class SqliteBus(AgentBus):
         except sqlite3.OperationalError:  # pragma: no cover - busy db
             return 0
         return 1
+
+    def fork(self, at_position: int,
+             path: Optional[str] = None) -> "SqliteBus":
+        """Prefix-copy fork into a fresh database file at ``path`` (a
+        derived sibling path when omitted; must not already hold a log).
+        Rows are copied column-for-column — the payload blobs/text land in
+        the child byte-identical — along with the durable trim base."""
+        conn = self._conn()
+        with self._append_lock:
+            base = self.trim_base()
+            at = min(at_position, self.tail())
+            if at < base:
+                raise TrimmedError(at_position, base)
+            rows = conn.execute(
+                "SELECT position, realtime_ts, type, payload FROM log "
+                "WHERE position < ? ORDER BY position", (at,)).fetchall()
+        if path is None:
+            path = f"{self._path}.fork-{at}-{uuid.uuid4().hex[:8]}"
+        child = SqliteBus(path, group_commit=self._group_commit,
+                          group_window_s=self._gc_window,
+                          synchronous=self._synchronous)
+        cc = child._conn()
+        with cc:  # rows + base land atomically: no half-forked child
+            cc.executemany(
+                "INSERT INTO log(position, realtime_ts, type, payload) "
+                "VALUES (?, ?, ?, ?)", rows)
+            if base > 0:
+                cc.execute("INSERT OR REPLACE INTO meta(key, value) "
+                           "VALUES ('trim_base', ?)", (str(base),))
+        child._trim_base = base
+        child._cached_tail = None
+        return child
 
     def _wait_for_append(self, known_tail: int, timeout: Optional[float]) -> bool:
         return self._backoff_wait(known_tail, timeout)
@@ -1144,6 +1217,81 @@ class KvBus(AgentBus):
                     i += 1
         self._pay(ops)
         return merged
+
+    def fork(self, at_position: int, path: Optional[str] = None) -> "KvBus":
+        """Copy-on-write fork, O(segments above ``at_position``).
+
+        Segments wholly below the fork point are shared with the parent by
+        **hard link** (free: no data copied; safe because segment objects
+        are immutable — the parent's trim unlinks only its own name and
+        compaction publishes replacements via ``os.replace``, so a shared
+        inode is never mutated in place). Only the *boundary* segment —
+        the one ``at_position`` splits — is re-encoded with the entries
+        below the fork point (one PUT). The child is staged in a sibling
+        temp directory and published with one atomic ``os.rename``: a
+        crash anywhere mid-fork (``kv.fork.boundary_rewrite`` /
+        ``kv.fork.pre_publish``) leaves the parent untouched and no child
+        at the target path, only an invisible staging dir.
+
+        ``fork_stats`` on the child (and ``last_fork_stats`` on the
+        parent) report ``{"shared", "rewritten", "at"}`` segment counts so
+        benchmarks and property tests can audit the sharing ratio."""
+        ops = 0
+        with self._lock:
+            ops += self._refresh()
+            at = min(at_position, self._tail)
+            if at < self._trim_base:
+                raise TrimmedError(at_position, self._trim_base)
+            root = path or f"{self._root}-fork-{at}-{uuid.uuid4().hex[:8]}"
+            parent_dir = os.path.dirname(os.path.abspath(root))
+            os.makedirs(parent_dir, exist_ok=True)
+            stage = f"{root}.tmp-{uuid.uuid4().hex}"
+            os.makedirs(stage)
+            shared = rewritten = 0
+            for s in self._starts:
+                if s >= at:
+                    break  # starts are sorted; nothing later is below at
+                n = self._segments[s]
+                ext = self._seg_ext.get(s, "bin")
+                if s + n <= at:
+                    os.link(self._seg_path(s, ext),
+                            os.path.join(stage, f"seg-{s:012d}.{ext}"))
+                    shared += 1
+                    continue
+                # boundary segment: only entries below the fork survive
+                entries = self._cache_get(s)
+                if entries is None:
+                    entries = self._fetch_segment(s) or []
+                    ops += 1
+                keep = [e for e in entries if e.position < at]
+                blob = self._encode_segment(keep)
+                bpath = os.path.join(
+                    stage, f"seg-{s:012d}.{self._segment_ext()}")
+                act = fault_point("kv.fork.boundary_rewrite")
+                if act is not None and act.op == "torn":
+                    # power cut mid-rewrite: a truncated boundary object
+                    # in the staging dir, which is never published
+                    with open(bpath, "wb") as f:
+                        f.write(_torn_blob(blob, act))
+                    raise CrashPoint(act.point, act.at_hit)
+                with open(bpath, "wb") as f:
+                    f.write(blob)
+                    if self._fsync:
+                        os.fsync(f.fileno())
+                self.rtt_ops += 1  # one PUT for the rewritten boundary
+                ops += 1
+                rewritten += 1
+            with open(os.path.join(stage, self._MARKER), "w") as f:
+                json.dump({"base": self._trim_base}, f)
+            fault_point("kv.fork.pre_publish")
+            os.rename(stage, root)  # atomic publish of the whole child
+            self.last_fork_stats = {"shared": shared,
+                                    "rewritten": rewritten, "at": at}
+        self._pay(ops)
+        child = KvBus(root, latency_s=self._latency, fsync=self._fsync,
+                      cache_segments=self._cache_max)
+        child.fork_stats = dict(self.last_fork_stats)
+        return child
 
     def _wait_for_append(self, known_tail: int, timeout: Optional[float]) -> bool:
         return self._backoff_wait(known_tail, timeout)

@@ -421,6 +421,74 @@ def run_compact(plan: FaultPlan, root: str,
     return _report(inj, crashed, v)
 
 
+def run_fork(plan: FaultPlan, root: str,
+             steps: Sequence[str] = CHAOS_STEPS) -> Dict[str, Any]:
+    """Crash inside KvBus ``fork``: the parent must be byte-for-byte
+    untouched (fork only *reads* the parent — the one write it does, the
+    boundary-segment rewrite, happens in the child's staging dir) and the
+    half-forked child must be absent from its target path. A clean retry
+    then produces a child whose prefix matches the parent exactly."""
+    env = fresh_env()
+    bus = _make_bus("kv", root)
+    _kickoff(bus)
+    pump(build_components(bus, env, announce_reboot=False, steps=steps))
+
+    kv_dir = os.path.join(root, "kv")
+
+    def seg_files() -> Dict[str, bytes]:
+        out: Dict[str, bytes] = {}
+        for name in sorted(os.listdir(kv_dir)):
+            with open(os.path.join(kv_dir, name), "rb") as f:
+                out[name] = f.read()
+        return out
+
+    def snap(b: AgentBus):
+        import json
+        return [(e.position, e.type.value,
+                 json.dumps(e.body, sort_keys=True))
+                for e in b.read(b.trim_base())]
+
+    # pad with one 4-entry segment and fork into the middle of it, so the
+    # fork always has a boundary segment to rewrite (the workload's own
+    # segments are 1-2 entries — a fork landing on a segment boundary
+    # would never traverse kv.fork.boundary_rewrite)
+    bus.append_many([E.mail(f"fork-pad-{i}", sender="chaos")
+                     for i in range(4)])
+    before_files = seg_files()
+    before_log = snap(bus)
+    at = bus.tail() - 2
+    child_root = os.path.join(root, "kv-child")
+    crashed = None
+    inj = faults.install(plan)
+    try:
+        bus.fork(at, child_root)
+    except FaultError as ex:
+        crashed = ex
+    finally:
+        faults.uninstall()
+
+    v: List[str] = []
+    if seg_files() != before_files:
+        v.append("parent segment files changed across the fork crash")
+    if crashed is not None and os.path.exists(child_root):
+        v.append("half-forked child published at its target path")
+    bus2 = _make_bus("kv", root)
+    if snap(bus2) != before_log:
+        v.append("parent log changed across the fork crash")
+    if bus2.quarantined:
+        v.append(f"reopen quarantined {bus2.quarantined} parent segments")
+    # after a crash the retry must succeed and yield an exact prefix of
+    # the parent; a fault whose traversal was never reached already forked
+    # cleanly — validate the child it produced instead
+    child = (bus2.fork(at, child_root) if crashed is not None
+             else KvBus(child_root))
+    if child.tail() != at:
+        v.append(f"retried fork tail {child.tail()} != fork point {at}")
+    if snap(child) != [r for r in before_log if r[0] < at]:
+        v.append("retried fork child prefix diverges from the parent")
+    return _report(inj, crashed, v)
+
+
 def _net_clients(host: str, port: int):
     a = NetBus((host, port), client_id="chaos-conn-a",
                connect_timeout=5.0, request_timeout=5.0)
@@ -552,6 +620,8 @@ def run_point(point: str, seed: int = 0,
             rep = run_trim(plan, "kv", root)
         elif sc == "compact:kv":
             rep = run_compact(plan, root)
+        elif sc == "fork:kv":
+            rep = run_fork(plan, root)
         elif sc == "net":
             rep = run_net(plan, root)
         else:

@@ -176,6 +176,17 @@ INJECTION_POINTS: Dict[str, PointSpec] = {
         "segment, before unlinking the rest — the tail segments are "
         "shadowed (their ranges duplicated) and must be dropped on "
         "reopen"),
+    "kv.fork.boundary_rewrite": PointSpec(
+        ("crash", "torn"), "fork:kv",
+        "forker dies mid-rewrite of the boundary segment (shared prefix "
+        "already hard-linked into the staging dir): the parent must be "
+        "untouched and no child may appear at the target path — the "
+        "half-forked staging dir is invisible garbage"),
+    "kv.fork.pre_publish": PointSpec(
+        ("crash",), "fork:kv",
+        "forker dies after the child's trim-base marker is written in "
+        "staging, before the atomic rename publish — a fully-built child "
+        "that was never acknowledged must stay absent"),
     # -- NetBus client ------------------------------------------------------
     "net.client.append.pre_send": PointSpec(
         ("disconnect",), "net",

@@ -536,6 +536,24 @@ class NetBus(AgentBus):
     def compact(self) -> int:
         return int(self._request("compact", {})["compacted"])
 
+    def fork(self, at_position: int,
+             path: Optional[str] = None) -> AgentBus:
+        """Forward a ``fork`` op to the bus server: the server forks its
+        backing log on its own storage (clamping/``TrimmedError`` semantics
+        are the backend's) and replies with the child's backend + path,
+        which is opened directly — the child is an ordinary local bus, so
+        what-if replay against it generates zero traffic on the parent's
+        server. ``path`` names the child's server-side storage (the server
+        and client share a filesystem in the deployments this targets —
+        same-host process isolation); omitted, the server derives a
+        sibling path next to its backing store."""
+        params: Dict[str, Any] = {"at": int(at_position)}
+        if path is not None:
+            params["path"] = path
+        frame = self._request("fork", params)
+        from .bus import make_bus  # local import: same idiom as make_bus's
+        return make_bus(str(frame["backend"]), str(frame["path"]))
+
     def _wait_for_append(self, known_tail: int,
                          timeout: Optional[float]) -> bool:
         """Block on the push-fed tail view (no polling, no request traffic

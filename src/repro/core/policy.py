@@ -72,6 +72,24 @@ class PolicyState:
                 self.driver_epoch = epoch
                 self.elected_driver = body.get("elect")
 
+    @classmethod
+    def at(cls, entries) -> "PolicyState":
+        """Fold an entry sequence into the policy state in force *after*
+        the last entry — the state a component that had played exactly
+        this prefix would hold. POLICY entries apply in log order;
+        CHECKPOINT entries fold their carried fencing view, the same two
+        inputs live components feed their own state from. Used by what-if
+        replay to recover the fork-time policy (and elected driver) from
+        a forked prefix without constructing any component."""
+        st = cls()
+        for e in entries:
+            if e.type == PayloadType.POLICY:
+                st.apply(e)
+            elif e.type == PayloadType.CHECKPOINT:
+                st.note_epoch(e.body.get("driver_epoch"),
+                              e.body.get("elected_driver"))
+        return st
+
     def note_epoch(self, epoch: Optional[int],
                    elected: Optional[str] = None) -> None:
         """Fold a checkpoint-carried fencing view (``driver_epoch`` /

@@ -191,6 +191,25 @@ def plan_compensations(bus: AgentBus) -> List[Dict[str, Any]]:
     return plans
 
 
+def in_flight_at(entries, position: int) -> List[str]:
+    """Intent ids proposed but not yet decided as of ``position``: an
+    INTENT entry lands below ``position`` with no COMMIT/ABORT for it
+    below ``position``. These are the intents a log forked at ``position``
+    re-adjudicates — the replayed Voter/Decider see them fresh, so a
+    substituted policy can flip their outcome (what-if replay reports
+    them as ``reopened``). Log order preserved."""
+    pending: List[str] = []
+    decided = set()
+    for e in entries:
+        if e.position >= position:
+            break
+        if e.type == PayloadType.INTENT:
+            pending.append(e.body.get("intent_id"))
+        elif e.type in (PayloadType.COMMIT, PayloadType.ABORT):
+            decided.add(e.body.get("intent_id"))
+    return [iid for iid in pending if iid not in decided]
+
+
 def committed_unexecuted(bus: AgentBus) -> List[Dict[str, Any]]:
     """WAL-style scan: committed intentions without a Result — the at-most-
     once candidates a recovering executor must treat as 'state unknown'.

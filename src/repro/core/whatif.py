@@ -1,0 +1,413 @@
+"""What-if replay: the forked log as a differential test bed (ISSUE 10).
+
+The paper's core claim is that the log *is* the agent's execution. Taken
+seriously, that means a policy change (voter rules, quorum modes, admission
+limits) can be tested against recorded history before it touches production
+traffic: fork the log (``AgentBus.fork``), substitute the policy on the
+child, re-run the suffix, and diff the outcomes. This module is that
+harness. *The Log is the Agent* (arXiv 2605.21997) motivates cheap
+event-sourced forks; *Auditable Agents* (arXiv 2604.05485) motivates
+replaying recorded tool-call histories under alternate guardrails.
+
+The replay makes **zero live inference calls** and **zero writes to the
+parent log or real environment**, by construction:
+
+* **Recorded-inference playback** — :class:`PlaybackPlanner` serves the
+  parent's logged ``InfOut`` plans, indexed by the replay Driver's
+  ``n_inferences`` (the ``_LineagePlanner`` pattern from
+  ``launch/procs.py``). The prefix below the fork point replays through the
+  Driver's own deterministic-replay machinery (it harvests the child log's
+  InfOuts and appends nothing); the suffix above it is served from the
+  parent's recording. Off the end of the recording the planner says
+  ``done``. No model is ever contacted.
+* **Sandboxed environment** — the caller supplies ``env_factory``; the
+  replay Executor mutates a fresh instance seeded to fork-time state by
+  re-applying the recorded effects below the fork point
+  (:func:`apply_effects`). The real environment is never touched.
+* **Child-only writes** — every component holds a client on the *child*
+  bus. The parent is read exactly once, up front.
+
+Which intents can flip? The substituted policy is appended to the child at
+its tail (so it is durable and visible in the trace), which by log-order
+semantics means it governs (a) every intent the replay Driver issues above
+the fork point and (b) the **reopened** intents — proposed below the fork
+but undecided there (``recovery.in_flight_at``), which the substituted
+voter re-adjudicates. Decisions fully settled below the fork point stay
+settled: replaying components are primed from the prefix exactly like a
+rebooted component (``chaos.build_components``), so they never re-vote or
+re-decide history. One caveat: the Decider snapshots its *quorum* policy at
+intent time, so a substituted ``decider`` scope only governs suffix
+intents, not reopened ones — voter-scope substitutions (the common case)
+govern both.
+
+The output is a structured :class:`ReplayDiff`: intents that flipped
+decided→aborted or vice versa (with the vetoing reasons), divergent
+Results, intents missing from / new in the replay, and a key-level delta
+between the replayed sandbox and a baseline environment reconstructed from
+the full parent recording. ``tools/whatif.py`` is the CLI face; see
+``docs/whatif.md`` for the full contract.
+"""
+from __future__ import annotations
+
+import copy
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from . import entries as E
+from .acl import BusClient
+from .bus import AgentBus
+from .decider import Decider
+from .driver import Driver, Planner
+from .entries import Entry, PayloadType
+from .executor import Executor, Handler
+from .introspect import TRACE_TYPES, IntentTrace, trace_intents
+from .policy import PolicyState
+from .recovery import in_flight_at
+from .voter import STANDARD_RULES, RuleVoter
+
+#: stable replay component ids — deliberately distinct from any production
+#: lineage except the Driver's, which MUST reuse the recorded driver id
+#: (replay dedupe and intent-id regeneration are lineage-scoped).
+WHATIF_VOTER = "whatif-voter"
+WHATIF_DECIDER = "whatif-decider"
+WHATIF_EXEC = "whatif-exec"
+
+
+class PlaybackPlanner(Planner):
+    """Serve the parent's recorded ``InfOut`` plans — never a live model.
+
+    Indexed by the bound Driver's ``n_inferences`` at propose time (bind
+    with ``planner.driver = drv`` after constructing the Driver), so the
+    prefix the Driver replays from the child log silently advances the
+    index past the plans it already consumed, and the first live propose
+    lands exactly on the parent's first above-the-fork plan. Past the end
+    of the recording it reports ``done`` — a replay can only shorten or
+    re-decide history, never invent new work.
+    """
+
+    def __init__(self, plans: Sequence[Dict[str, Any]]):
+        self.plans = [copy.deepcopy(p) for p in plans]
+        self.driver: Optional[Driver] = None  # bound after Driver()
+        self.calls = 0       # propose() invocations (all served from tape)
+        self.off_script = 0  # proposes past the end of the recording
+
+    def propose(self, context: Dict[str, Any]) -> Dict[str, Any]:
+        self.calls += 1
+        i = self.driver.n_inferences if self.driver is not None else 0
+        if i >= len(self.plans):
+            self.off_script += 1
+            return {"done": True, "note": "playback exhausted"}
+        return copy.deepcopy(self.plans[i])
+
+
+def apply_effects(entries: Sequence[Entry], handlers: Dict[str, Handler],
+                  env: Any,
+                  compensators: Optional[Dict[str, Handler]] = None,
+                  ) -> List[str]:
+    """Re-apply the recorded effects in ``entries`` to ``env``, in the
+    order they originally landed (each non-recovered ``Result`` marks one
+    completed execution; its ``Intent`` body carries the kind/args). This
+    seeds a sandbox to the state the real environment had at the recorded
+    point — handlers are assumed deterministic functions of ``(args,
+    env)``, the same assumption the Executor's at-most-once recovery
+    already rests on. Handler exceptions are swallowed (the original run
+    recorded them as failed Results; the state they left is whatever the
+    handler managed before raising, same as live). Returns the intent ids
+    applied, which double as the replay Executor's ``executed`` prime."""
+    compensators = compensators or {}
+    intents: Dict[str, Dict[str, Any]] = {}
+    applied: List[str] = []
+    for e in entries:
+        if e.type == PayloadType.INTENT:
+            intents[e.body["intent_id"]] = e.body
+            continue
+        if e.type != PayloadType.RESULT or e.body.get("recovered"):
+            continue
+        iid = e.body["intent_id"]
+        intent = intents.get(iid)
+        if intent is None:
+            continue  # result for a trimmed-away or foreign intent
+        if intent.get("compensates"):
+            handler = compensators.get(intent["kind"])
+        else:
+            handler = handlers.get(intent["kind"])
+        if handler is None:
+            continue
+        try:
+            handler(copy.deepcopy(intent.get("args", {})), env)
+        except Exception:  # noqa: BLE001 - recorded run already reported it
+            pass
+        applied.append(iid)
+    return applied
+
+
+def _norm(v: Any) -> Any:
+    """JSON-comparable normal form (sets ordered, containers recursed)."""
+    if isinstance(v, set):
+        try:
+            return sorted(v)
+        except TypeError:
+            return sorted(v, key=repr)
+    if isinstance(v, dict):
+        return {str(k): _norm(x) for k, x in sorted(v.items(),
+                                                    key=lambda kv: str(kv[0]))}
+    if isinstance(v, (list, tuple)):
+        return [_norm(x) for x in v]
+    return v
+
+
+def env_delta(baseline: Any, replayed: Any) -> Dict[str, Any]:
+    """Key-level diff of two environments (dicts compared per key, other
+    objects via their ``vars()`` when available, else whole-value)."""
+    if not isinstance(baseline, dict) and hasattr(baseline, "__dict__"):
+        baseline = vars(baseline)
+    if not isinstance(replayed, dict) and hasattr(replayed, "__dict__"):
+        replayed = vars(replayed)
+    if isinstance(baseline, dict) and isinstance(replayed, dict):
+        delta: Dict[str, Any] = {}
+        for k in sorted(set(baseline) | set(replayed), key=str):
+            b, r = _norm(baseline.get(k)), _norm(replayed.get(k))
+            if b != r:
+                delta[str(k)] = {"baseline": b, "replay": r}
+        return delta
+    b, r = _norm(baseline), _norm(replayed)
+    return {} if b == r else {"env": {"baseline": b, "replay": r}}
+
+
+@dataclass
+class ReplayDiff:
+    """Structured outcome delta between a recorded run and its what-if
+    replay. ``flipped_to_abort`` / ``flipped_to_commit`` carry the intent
+    identity plus the replay's vetoing (or approving) vote reasons;
+    ``divergent_results`` are intents committed in both worlds whose
+    Results differ; ``env_delta`` compares the replayed sandbox against a
+    baseline reconstructed from the full parent recording. ``reopened``
+    lists the below-fork in-flight intents the replay re-adjudicated.
+    ``live_inferences`` is structurally zero (PlaybackPlanner never calls
+    a model) and reported so callers can assert it."""
+
+    fork_at: int
+    parent_tail: int
+    child_tail: int
+    policy: Dict[str, Dict[str, Any]]
+    reopened: List[str] = field(default_factory=list)
+    flipped_to_abort: List[Dict[str, Any]] = field(default_factory=list)
+    flipped_to_commit: List[Dict[str, Any]] = field(default_factory=list)
+    divergent_results: List[Dict[str, Any]] = field(default_factory=list)
+    missing_in_replay: List[str] = field(default_factory=list)
+    new_in_replay: List[str] = field(default_factory=list)
+    env_delta: Dict[str, Any] = field(default_factory=dict)
+    applied_effects: int = 0
+    planner_calls: int = 0
+    off_script: int = 0
+    live_inferences: int = 0
+    rounds: int = 0
+    child_path: Optional[str] = None
+
+    @property
+    def diverged(self) -> bool:
+        return bool(self.flipped_to_abort or self.flipped_to_commit
+                    or self.divergent_results or self.missing_in_replay
+                    or self.new_in_replay or self.env_delta)
+
+    def to_dict(self) -> Dict[str, Any]:
+        from dataclasses import asdict
+        d = asdict(self)
+        d["diverged"] = self.diverged
+        return d
+
+    def summary(self) -> str:
+        lines = [f"what-if replay @ fork {self.fork_at} "
+                 f"(parent tail {self.parent_tail}, "
+                 f"child tail {self.child_tail}, "
+                 f"live inferences {self.live_inferences})"]
+        for f in self.flipped_to_abort:
+            why = "; ".join(f["veto_reasons"]) or "no vote reason recorded"
+            lines.append(f"  commit -> ABORT  {f['intent_id']} "
+                         f"({f['kind']}): {why}")
+        for f in self.flipped_to_commit:
+            lines.append(f"  abort -> COMMIT  {f['intent_id']} "
+                         f"({f['kind']})")
+        for f in self.divergent_results:
+            lines.append(f"  result diverged  {f['intent_id']} "
+                         f"({f['kind']})")
+        for iid in self.missing_in_replay:
+            lines.append(f"  missing in replay  {iid}")
+        for iid in self.new_in_replay:
+            lines.append(f"  new in replay  {iid}")
+        for k, d in self.env_delta.items():
+            lines.append(f"  env[{k}]: {d['baseline']!r} -> {d['replay']!r}")
+        if not self.diverged:
+            lines.append("  no divergence: the policy change is a no-op "
+                         "on this recording")
+        return "\n".join(lines)
+
+
+def _vote_reasons(t: IntentTrace, approve: bool) -> List[str]:
+    return [str(v.get("reason", "")) for v in t.votes
+            if bool(v.get("approve")) == approve]
+
+
+def _pump(parts: Sequence[Any], max_rounds: int) -> int:
+    """Synchronous round-robin play to quiescence (chaos.pump's loop,
+    minus the net-refresh hook — every replay client is in-process)."""
+    idle = 0
+    for rounds in range(1, max_rounds + 1):
+        played = 0
+        for p in parts:
+            played += p.play_available()
+        if played:
+            idle = 0
+            continue
+        idle += 1
+        if idle >= 2:
+            return rounds
+    return max_rounds
+
+
+def whatif(bus: AgentBus, fork_at: int,
+           policy: Dict[str, Dict[str, Any]],
+           handlers: Dict[str, Handler],
+           env_factory: Callable[[], Any],
+           compensators: Optional[Dict[str, Handler]] = None,
+           voter_rules: Sequence = STANDARD_RULES,
+           default_approve: bool = True,
+           fork_path: Optional[str] = None,
+           max_rounds: int = 500) -> ReplayDiff:
+    """Fork ``bus`` at ``fork_at``, replay the suffix under ``policy``
+    (``{scope: body}``, e.g. ``{"voter:rule": {"kind_denylist": [...]}}``),
+    and return the :class:`ReplayDiff`. The parent bus is only read; the
+    real environment is never touched (``env_factory`` builds the sandbox
+    *and* the baseline). The child log is left on disk at
+    ``diff.child_path`` (durable backends) for post-mortem inspection —
+    it now *contains* the counterfactual run.
+
+    ``handlers`` / ``compensators`` must be the same (deterministic)
+    executor registrations the recorded run used; ``voter_rules`` is the
+    substituted voting bench (``STANDARD_RULES`` by default — note the
+    recorded run may have used a different bench: the substitution is the
+    point)."""
+    base = bus.trim_base()
+    parent_entries = bus.read(base)
+    parent_tail = bus.tail()
+    fork_at = min(fork_at, parent_tail)
+    parent_trace = trace_intents(
+        [e for e in parent_entries if e.type in TRACE_TYPES])
+
+    child = bus.fork(fork_at, fork_path)
+    prefix = child.read(base)
+
+    # -- who drove the recording? (intent-id regeneration is lineage-scoped)
+    st = PolicyState.at(prefix)
+    driver_id = st.elected_driver
+    if driver_id is None:
+        c = Counter(e.body.get("driver_id") for e in parent_entries
+                    if e.type == PayloadType.INF_OUT)
+        driver_id = c.most_common(1)[0][0] if c else "whatif-driver"
+    plans = [e.body["plan"] for e in parent_entries
+             if e.type == PayloadType.INF_OUT
+             and e.body.get("driver_id") == driver_id]
+
+    # -- substitute the policy ON THE CHILD LOG (durable + traceable)
+    admin = BusClient(child, "whatif-admin", "admin")
+    for scope, body in policy.items():
+        admin.append(E.policy(scope, dict(body), issuer="whatif"))
+
+    # -- sandbox seeded to fork-time state; baseline = the full recording
+    sandbox = env_factory()
+    applied = apply_effects(prefix, handlers, sandbox, compensators)
+    baseline = env_factory()
+    apply_effects(parent_entries, handlers, baseline, compensators)
+
+    # -- replay components, primed from the prefix like a rebooted set
+    planner = PlaybackPlanner(plans)
+    driver = Driver(BusClient(child, driver_id, "driver"), planner,
+                    driver_id=driver_id, elect=False)
+    planner.driver = driver
+    voter = RuleVoter(BusClient(child, WHATIF_VOTER, "voter"),
+                      rules=voter_rules, default_approve=default_approve,
+                      voter_id=WHATIF_VOTER)
+    decider = Decider(BusClient(child, WHATIF_DECIDER, "decider"),
+                      decider_id=WHATIF_DECIDER)
+    executor = Executor(BusClient(child, WHATIF_EXEC, "executor"), sandbox,
+                        handlers=dict(handlers), executor_id=WHATIF_EXEC,
+                        compensators=dict(compensators or {}))
+    # intents our voter type already spoke for below the fork: the Decider
+    # counts one vote per type, so a fresh same-type vote is dead weight
+    prefix_voted = {e.body["intent_id"] for e in prefix
+                    if e.type == PayloadType.VOTE
+                    and e.body.get("voter_type") == voter.voter_type}
+    prefix_intents = [e for e in prefix if e.type == PayloadType.INTENT]
+    voter._voted.update(e.body["intent_id"] for e in prefix_intents)
+    decider.decided.update(e.body["intent_id"] for e in prefix
+                           if e.type in (PayloadType.COMMIT,
+                                         PayloadType.ABORT))
+    # at-most-once prime: every intent with a recorded Result below the
+    # fork is settled — never re-executed, even if its handler is not in
+    # the substituted registration set (Commit precedes Result in log
+    # order, so without the prime the prefix replay would re-execute)
+    executor.executed.update(
+        e.body["intent_id"] for e in prefix
+        if e.type == PayloadType.RESULT and not e.body.get("recovered"))
+
+    # -- reopen the in-flight intents under the substituted policy: fold
+    # the whole prefix (plus the policy entries now at the tail) into the
+    # voter's state first, then un-prime and re-handle each reopened
+    # intent that no recorded vote had already spoken for.
+    reopened = [iid for iid in in_flight_at(prefix, fork_at)
+                if iid is not None]
+    voter.play_available()
+    for e in prefix_intents:
+        iid = e.body["intent_id"]
+        if iid in reopened and iid not in prefix_voted:
+            voter._voted.discard(iid)
+            voter.handle(e)
+
+    rounds = _pump([driver, voter, decider, executor], max_rounds)
+
+    # -- diff the two worlds, per intent id (suffix ids match the parent's
+    # because Driver intent identity is the deterministic lineage formula)
+    child_entries = child.read(base)
+    child_trace = trace_intents(
+        [e for e in child_entries if e.type in TRACE_TYPES])
+    child_by = {t.intent_id: t for t in child_trace}
+    diff = ReplayDiff(fork_at=fork_at, parent_tail=parent_tail,
+                      child_tail=child.tail(),
+                      policy={k: dict(v) for k, v in policy.items()},
+                      reopened=reopened, applied_effects=len(applied),
+                      planner_calls=planner.calls,
+                      off_script=planner.off_script,
+                      live_inferences=0, rounds=rounds,
+                      child_path=getattr(child, "_root", None)
+                      or getattr(child, "_path", None))
+    for pt in parent_trace:
+        ct = child_by.get(pt.intent_id)
+        if ct is None:
+            diff.missing_in_replay.append(pt.intent_id)
+            continue
+        if pt.decision == "commit" and ct.decision == "abort":
+            diff.flipped_to_abort.append(
+                {"intent_id": pt.intent_id, "kind": pt.kind,
+                 "veto_reasons": _vote_reasons(ct, approve=False)})
+        elif pt.decision == "abort" and ct.decision == "commit":
+            diff.flipped_to_commit.append(
+                {"intent_id": pt.intent_id, "kind": pt.kind,
+                 "approve_reasons": _vote_reasons(ct, approve=True)})
+        elif pt.decision == "commit" and ct.decision == "commit":
+            pr = (None if pt.result is None else
+                  {"ok": pt.result.get("ok"),
+                   "value": _norm(pt.result.get("value"))})
+            cr = (None if ct.result is None else
+                  {"ok": ct.result.get("ok"),
+                   "value": _norm(ct.result.get("value"))})
+            if pr != cr:
+                diff.divergent_results.append(
+                    {"intent_id": pt.intent_id, "kind": pt.kind,
+                     "parent_result": pr, "replay_result": cr})
+    parent_ids = {t.intent_id for t in parent_trace}
+    diff.new_in_replay = [t.intent_id for t in child_trace
+                          if t.intent_id not in parent_ids]
+    diff.env_delta = env_delta(baseline, sandbox)
+    child.close()
+    return diff

@@ -312,6 +312,8 @@ class BusServer:
             return {"ok": True, "base": base}
         if op == "compact":
             return {"ok": True, "compacted": int(self.bus.compact())}
+        if op == "fork":
+            return self._op_fork(frame)
         if op == "wait":
             return self._op_wait(frame)
         if op == "ping":
@@ -393,6 +395,29 @@ class BusServer:
             conn.close()
             raise ConnectionError("injected reset before append reply")
         return {"ok": True, "positions": positions}
+
+    def _op_fork(self, frame: Dict[str, Any]) -> Dict[str, Any]:
+        """Fork the backing log server-side and hand back (backend, path)
+        so the client can open the child directly — the child is a plain
+        local bus, deliberately outside this server's epoch/push machinery
+        (what-if replay against it must not generate parent traffic).
+        Only path-addressable backends are forkable over the wire: a
+        MemoryBus-backed server has nowhere the client could reach."""
+        child = self.bus.fork(int(frame["at"]), frame.get("path"))
+        root = getattr(child, "_root", None)  # KvBus stores a directory
+        if root is not None:
+            backend, path = "kv", root
+        else:
+            path = getattr(child, "_path", None)  # SqliteBus stores a file
+            backend = "sqlite"
+        try:
+            if path is None:
+                return {"ok": False, "error": "unsupported",
+                        "message": "backing bus has no forkable storage "
+                                   "path (memory backend?)"}
+            return {"ok": True, "backend": backend, "path": str(path)}
+        finally:
+            child.close()  # the client reopens it; keep no server handle
 
     def _op_read(self, conn: _Conn, frame: Dict[str, Any]):
         types = frame.get("types")

@@ -691,3 +691,174 @@ def test_kv_binary_segments_survive_trim_and_compact(tmp_path):
     assert [e.position for e in got] == list(range(4, 12))
     assert codec.DECODES.bodies == 0  # still lazy after merge
     assert got[0].body["text"] == "m2-0"
+
+
+# ---------------------------------------------------------------------------
+# Fork conformance (ISSUE 10): the SAME assertions against every backend.
+# ---------------------------------------------------------------------------
+
+class TestForkConformance:
+    @staticmethod
+    def _fill(bus, n=8):
+        for i in range(n):  # one entry per batch/segment: trim-friendly
+            bus.append(E.mail(f"m{i}", tag=i))
+
+    def test_fork_prefix_byte_identical(self, any_bus):
+        from repro.core import codec
+
+        self._fill(any_bus)
+        child = any_bus.fork(5)
+        try:
+            assert child.tail() == 5
+            assert child.trim_base() == any_bus.trim_base() == 0
+            parent_prefix = any_bus.read(0)[:5]
+            child_entries = child.read(0)
+            assert child_entries == parent_prefix  # positions, types, bodies
+            # byte-identical through the codec: timestamps included
+            assert codec.encode_entries(child_entries) == \
+                codec.encode_entries(parent_prefix)
+        finally:
+            child.close()
+
+    def test_fork_divergence_isolated_both_ways(self, any_bus):
+        self._fill(any_bus, 4)
+        child = any_bus.fork(4)
+        try:
+            any_bus.append(E.mail("parent-only"))
+            child.append(E.mail("child-only"))
+            child.append(E.mail("child-only-2"))
+            assert any_bus.tail() == 5 and child.tail() == 6
+            assert [e.body["text"] for e in any_bus.read(4)] == \
+                ["parent-only"]
+            assert [e.body["text"] for e in child.read(4)] == \
+                ["child-only", "child-only-2"]
+        finally:
+            child.close()
+
+    def test_fork_of_fork(self, any_bus):
+        self._fill(any_bus, 6)
+        child = any_bus.fork(6)
+        try:
+            child.append(E.mail("c"))
+            grand = child.fork(3)
+            try:
+                assert grand.tail() == 3
+                assert grand.read(0) == any_bus.read(0, 3)
+                grand.append(E.mail("g"))
+                assert child.tail() == 7 and any_bus.tail() == 6
+            finally:
+                grand.close()
+        finally:
+            child.close()
+
+    def test_fork_clamps_to_tail(self, any_bus):
+        self._fill(any_bus, 3)
+        child = any_bus.fork(999)
+        try:
+            assert child.tail() == 3
+        finally:
+            child.close()
+
+    def test_fork_below_trim_base_raises(self, any_bus):
+        from repro.core.bus import TrimmedError
+
+        self._fill(any_bus, 6)
+        base = any_bus.trim(3)
+        assert base == 3  # single-entry batches: trim lands exactly
+        with pytest.raises(TrimmedError) as ei:
+            any_bus.fork(base - 1)
+        assert ei.value.requested == base - 1 and ei.value.base == base
+        # at or above the base is fine, and the child inherits the base
+        child = any_bus.fork(5)
+        try:
+            assert child.trim_base() == base
+            assert [e.position for e in child.read(base)] == [3, 4]
+            with pytest.raises(TrimmedError):
+                child.read(0)
+        finally:
+            child.close()
+
+
+def test_kv_fork_is_copy_on_write(tmp_path):
+    """The acceptance mechanics, counted: segments wholly below the fork
+    point are shared by hard link (same inode, no data copied), only the
+    boundary segment is rewritten, and writes on either side never touch
+    the other's files."""
+    import os as _os
+
+    root = str(tmp_path / "kv-cow")
+    bus = KvBus(root)
+    for i in range(10):  # 10 segments x 4 entries
+        bus.append_many([E.mail(f"s{i}e{j}") for j in range(4)])
+    child_root = str(tmp_path / "kv-cow-child")
+    child = bus.fork(26, child_root)  # splits segment 6 (entries 24..27)
+    assert child.fork_stats == {"shared": 6, "rewritten": 1, "at": 26}
+    assert bus.last_fork_stats == child.fork_stats
+    shared = sorted(n for n in _os.listdir(child_root)
+                    if n.startswith("seg-"))[:6]
+    for name in shared:
+        sp = _os.stat(_os.path.join(child_root, name))
+        pp = _os.stat(_os.path.join(root, name))
+        assert sp.st_ino == pp.st_ino and sp.st_nlink >= 2  # same inode
+    assert child.read(0) == bus.read(0)[:26]
+    # divergence: child appends create child-only segments; parent trim
+    # unlinks only the parent's name — the shared inode survives
+    child.append(E.mail("child"))
+    bus.trim(8)  # drops parent segments 0 and 1
+    assert [e.position for e in child.read(0)] == list(range(27))
+    fresh = KvBus(child_root)
+    assert [e.position for e in fresh.read(0)] == list(range(27))
+    assert fresh.quarantined == 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_kv_fork_cow_property(seed):
+    """Random append/trim/compact/fork interleavings: a fork child's
+    segment files are never mutated by later parent activity, and
+    ``fork_stats['shared']`` always equals the number of parent segments
+    wholly below the fork point."""
+    import os as _os
+    import random
+    import shutil
+    import tempfile
+
+    rng = random.Random(seed)
+    top = tempfile.mkdtemp(prefix="kv-prop-")
+    try:
+        bus = KvBus(_os.path.join(top, "parent"))
+        bus.append_many([E.mail(f"seed{j}") for j in range(4)])
+        forks = []  # (root, file->bytes snapshot, expected entries)
+        for step in range(rng.randint(6, 14)):
+            op = rng.choice(["append", "append", "append", "trim",
+                             "compact", "fork", "fork"])
+            if op == "append":
+                n = rng.randint(1, 5)
+                bus.append_many([E.mail(f"{step}-{j}") for j in range(n)])
+            elif op == "trim":
+                bus.trim(rng.randint(0, bus.tail()))
+            elif op == "compact":
+                bus.compact(max_segment_entries=rng.choice([4, 8, 256]))
+            else:
+                base = bus.trim_base()
+                at = rng.randint(base, bus.tail())  # at == base: empty child
+                with bus._lock:  # count the expectation from the layout
+                    expect_shared = sum(
+                        1 for s, n in bus._segments.items() if s + n <= at)
+                root = _os.path.join(top, f"child-{step}")
+                child = bus.fork(at, root)
+                assert child.fork_stats["shared"] == expect_shared
+                snap = {}
+                for name in _os.listdir(root):
+                    with open(_os.path.join(root, name), "rb") as f:
+                        snap[name] = f.read()
+                forks.append((root, snap, bus.read(base, at)))
+        for root, snap, expected in forks:
+            for name, blob in snap.items():  # no shared file ever mutated
+                with open(_os.path.join(root, name), "rb") as f:
+                    assert f.read() == blob, f"{name} mutated under {root}"
+            fresh = KvBus(root)
+            assert fresh.read(fresh.trim_base()) == expected
+            assert fresh.quarantined == 0
+    finally:
+        shutil.rmtree(top, ignore_errors=True)

@@ -336,3 +336,52 @@ def test_announce_reboot_without_trim_is_plain():
     ex = Executor(BusClient(bus, "ex2", "executor"), env=None,
                   handlers={}, announce_reboot=True)
     assert set(ex.intents) == {"i1"} and ex.executed == {"i1"}
+
+
+# ---------------------------------------------------------------------------
+# Fork-window fault points (ISSUE 10): a crash anywhere mid-fork leaves the
+# parent byte-for-byte untouched and no child at the target path. (The
+# matrix test above already drives both points through the full chaos
+# cycle; these are the targeted mechanics.)
+# ---------------------------------------------------------------------------
+
+def _seg_bytes(root):
+    out = {}
+    for name in sorted(os.listdir(root)):
+        with open(os.path.join(root, name), "rb") as f:
+            out[name] = f.read()
+    return out
+
+
+@pytest.mark.parametrize("point,op", [
+    ("kv.fork.boundary_rewrite", "crash"),
+    ("kv.fork.boundary_rewrite", "torn"),
+    ("kv.fork.pre_publish", "crash"),
+])
+def test_fork_crash_leaves_parent_untouched_child_absent(tmp_path, point, op):
+    from repro.core import faults
+
+    root = str(tmp_path / "kv")
+    bus = KvBus(root)
+    for i in range(5):
+        bus.append_many([E.mail(f"s{i}e{j}") for j in range(3)])
+    before = _seg_bytes(root)
+    child_root = str(tmp_path / "kv-child")
+    inj = faults.install(FaultPlan.single(point, op=op, at_hit=1))
+    try:
+        with pytest.raises(CrashPoint):
+            bus.fork(11, child_root)  # splits segment 3 (entries 9..11)
+    finally:
+        faults.uninstall()
+    assert [f.point for f in inj.fired] == [point]
+    assert _seg_bytes(root) == before  # parent byte-for-byte untouched
+    assert not os.path.exists(child_root)  # half-forked child never published
+    # only invisible staging garbage may remain, never a readable child
+    leftovers = [n for n in os.listdir(tmp_path) if n.startswith("kv-child")]
+    assert all(".tmp-" in n for n in leftovers)
+    fresh = KvBus(root)  # reopen: nothing quarantined, log intact
+    assert fresh.quarantined == 0
+    assert [e.position for e in fresh.read(0)] == list(range(15))
+    child = fresh.fork(11, child_root)  # clean retry succeeds
+    assert child.read(0) == fresh.read(0)[:11]
+    assert child.fork_stats == {"shared": 3, "rewritten": 1, "at": 11}

@@ -1,0 +1,215 @@
+"""What-if replay (ISSUE 10): fork a recorded run, substitute the voter
+policy, replay with zero live inference and zero parent writes, diff."""
+import copy
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import chaos
+from repro.core import entries as E
+from repro.core.acl import BusClient
+from repro.core.bus import KvBus, MemoryBus, SqliteBus
+from repro.core.entries import PayloadType
+from repro.core.policy import PolicyState
+from repro.core.recovery import in_flight_at
+from repro.core.whatif import (PlaybackPlanner, ReplayDiff, apply_effects,
+                               env_delta, whatif)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _record(bus):
+    """The chaos demo workload: 4 chaos_work intents, voted and executed."""
+    env = chaos.fresh_env()
+    chaos._kickoff(bus)
+    chaos.pump(chaos.build_components(bus, env, announce_reboot=False))
+    return env
+
+
+def _snapshot(bus):
+    return [(e.position, e.type.value, json.dumps(e.body, sort_keys=True),
+             e.realtime_ts) for e in bus.read(bus.trim_base())]
+
+
+@pytest.fixture(params=["kv", "sqlite"])
+def recorded_bus(request, tmp_path):
+    if request.param == "kv":
+        bus = KvBus(str(tmp_path / "rec-kv"))
+    else:
+        bus = SqliteBus(str(tmp_path / "rec.db"))
+    env = _record(bus)
+    yield bus, env
+    bus.close()
+
+
+class TestWhatifE2E:
+    def test_denylist_flips_exactly_the_vetoed_intents(self, recorded_bus):
+        bus, env = recorded_bus
+        before_log = _snapshot(bus)
+        env_before = copy.deepcopy(env)
+        work_iids = sorted(
+            e.body["intent_id"] for e in bus.read(0)
+            if e.type == PayloadType.INTENT
+            and e.body["kind"] == "chaos_work")
+
+        diff = whatif(bus, fork_at=2,
+                      policy={"voter:rule": {"kind_denylist": ["chaos_work"]}},
+                      handlers=dict(chaos.CHAOS_HANDLERS),
+                      env_factory=chaos.fresh_env)
+
+        # exactly the now-vetoed intents flipped, with the veto reason
+        assert sorted(f["intent_id"] for f in diff.flipped_to_abort) == \
+            work_iids
+        for f in diff.flipped_to_abort:
+            assert f["veto_reasons"] == ["kind 'chaos_work' denied"]
+        assert diff.flipped_to_commit == []
+        assert diff.divergent_results == []
+        assert diff.missing_in_replay == []
+        assert diff.diverged
+        # the sandbox never ran the vetoed work; the baseline did
+        assert set(diff.env_delta) == {"done", "count"}
+        assert diff.env_delta["done"]["replay"] == []
+        # zero live inference, zero parent writes, real env untouched
+        assert diff.live_inferences == 0
+        assert _snapshot(bus) == before_log
+        assert env == env_before
+        # the counterfactual log survives for post-mortems
+        assert diff.child_path and os.path.exists(diff.child_path)
+        assert diff.to_dict()["diverged"] is True
+        assert "commit -> ABORT" in diff.summary()
+
+    def test_noop_policy_replay_is_a_fixed_point(self, recorded_bus):
+        """Determinism check: substituting an empty policy reproduces the
+        recorded decisions, results, and environment exactly."""
+        bus, _ = recorded_bus
+        diff = whatif(bus, fork_at=2,
+                      policy={"voter:rule": {"kind_denylist": []}},
+                      handlers=dict(chaos.CHAOS_HANDLERS),
+                      env_factory=chaos.fresh_env)
+        assert not diff.diverged, diff.summary()
+        assert diff.new_in_replay == []
+        assert diff.env_delta == {}
+        assert diff.live_inferences == 0
+        assert "no-op" in diff.summary()
+
+    def test_reopened_in_flight_intent_adjudicated_under_new_policy(
+            self, tmp_path):
+        """An intent proposed but undecided below the fork point is
+        re-adjudicated by the substituted voter."""
+        bus = KvBus(str(tmp_path / "kv-inflight"))
+        admin = BusClient(bus, "adm", "admin")
+        admin.append(E.policy("decider", {"mode": "first_voter",
+                                          "voter_types": ["rule"]}))
+        drv = BusClient(bus, "d1", "driver")
+        drv.append(E.policy("driver", {"epoch": 1, "elect": "d1"},
+                            issuer="d1"))
+        drv.append(E.intent("chaos_work", {"step": "omega"}, "d1",
+                            intent_id="d1-i0"))
+        fork_at = bus.tail()  # the intent is in flight: no vote, no decision
+
+        diff = whatif(bus, fork_at,
+                      policy={"voter:rule": {"kind_denylist": ["chaos_work"]}},
+                      handlers=dict(chaos.CHAOS_HANDLERS),
+                      env_factory=chaos.fresh_env)
+        assert diff.reopened == ["d1-i0"]
+        # undecided in the parent -> not a flip, but decided in the child
+        assert diff.flipped_to_abort == []
+        child = KvBus(diff.child_path)
+        aborts = [e.body["intent_id"] for e in
+                  child.read(0, types=[PayloadType.ABORT])]
+        assert aborts == ["d1-i0"]
+        vetoes = [e.body["reason"] for e in
+                  child.read(0, types=[PayloadType.VOTE])
+                  if not e.body["approve"]]
+        assert vetoes == ["kind 'chaos_work' denied"]
+
+
+def test_playback_planner_never_goes_live():
+    plans = [{"intent": {"kind": "k", "args": {"i": i}}} for i in range(2)]
+    pb = PlaybackPlanner(plans)
+    assert pb.propose({}) == plans[0]  # unbound driver: index 0
+    pb.propose({})["intent"]["args"]["i"] = 99  # deep copies: tape immutable
+    assert pb.plans[0]["intent"]["args"]["i"] == 0
+    bound = type("D", (), {"n_inferences": 2})()
+    pb.driver = bound
+    assert pb.propose({}) == {"done": True, "note": "playback exhausted"}
+    assert pb.calls == 3 and pb.off_script == 1
+
+
+def test_apply_effects_seeds_sandbox_from_recorded_results():
+    bus = MemoryBus()
+    bus.append(E.intent("chaos_work", {"step": "a"}, "d", intent_id="i1"))
+    bus.append(E.result("i1", True, {"step": "a"}, "ex"))
+    bus.append(E.intent("chaos_work", {"step": "b"}, "d", intent_id="i2"))
+    bus.append(E.result("__reboot__", True, {}, "ex", recovered=True))
+    env = chaos.fresh_env()
+    applied = apply_effects(bus.read(0), chaos.CHAOS_HANDLERS, env)
+    assert applied == ["i1"]  # i2 never resulted; the reboot marker skipped
+    assert env["done"] == {"a"} and env["count"] == {"a": 1}
+
+
+def test_env_delta_is_key_level_and_order_insensitive():
+    assert env_delta({"s": {1, 2}}, {"s": {2, 1}}) == {}
+    d = env_delta({"n": 1, "both": "x"}, {"n": 2, "both": "x", "new": True})
+    assert d == {"n": {"baseline": 1, "replay": 2},
+                 "new": {"baseline": None, "replay": True}}
+
+
+def test_policy_state_at_folds_policy_and_checkpoints():
+    entries = MemoryBus()
+    entries.append(E.policy("decider", {"mode": "quorum_k", "k": 2}))
+    entries.append(E.policy("voter:rule", {"kind_denylist": ["x"]}))
+    entries.append(E.policy("driver", {"epoch": 3, "elect": "d9"}))
+    entries.append(E.checkpoint("c", 1, "s", driver_epoch=5,
+                                elected_driver="d10"))
+    st = PolicyState.at(entries.read(0))
+    assert st.decider.mode == "quorum_k" and st.decider.k == 2
+    assert st.voter["rule"] == {"kind_denylist": ["x"]}
+    assert (st.driver_epoch, st.elected_driver) == (5, "d10")
+
+
+def test_in_flight_at_reports_undecided_intents_below_position():
+    bus = MemoryBus()
+    bus.append(E.intent("k", {}, "d", intent_id="i1"))  # 0: decided below
+    bus.append(E.commit("i1", "dec"))                   # 1
+    bus.append(E.intent("k", {}, "d", intent_id="i2"))  # 2: in flight at 4
+    bus.append(E.intent("k", {}, "d", intent_id="i3"))  # 3: in flight at 4
+    bus.append(E.abort("i2", "dec"))                    # 4: decided above
+    entries = bus.read(0)
+    assert in_flight_at(entries, 4) == ["i2", "i3"]
+    assert in_flight_at(entries, 5) == ["i3"]
+    assert in_flight_at(entries, 0) == []
+
+
+def test_whatif_cli_record_and_diff(tmp_path):
+    envp = dict(os.environ,
+                PYTHONPATH=os.path.join(REPO, "src")
+                + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    tool = os.path.join(REPO, "tools", "whatif.py")
+    busspec = f"kv:{tmp_path / 'cli-kv'}"
+    rec = subprocess.run([sys.executable, tool, "--bus", busspec,
+                          "--record"], capture_output=True, text=True,
+                         env=envp, timeout=120)
+    assert rec.returncode == 0, rec.stderr
+    assert "recorded" in rec.stdout
+    out = subprocess.run([sys.executable, tool, "--bus", busspec,
+                          "--fork-at", "2", "--policy", "chaos_work",
+                          "--diff", "--json"], capture_output=True,
+                         text=True, env=envp, timeout=120)
+    assert out.returncode == 0, out.stderr
+    diff = json.loads(out.stdout)
+    assert diff["diverged"] is True
+    assert diff["live_inferences"] == 0
+    assert len(diff["flipped_to_abort"]) == 4
+    assert all(f["kind"] == "chaos_work" for f in diff["flipped_to_abort"])
+
+
+def test_replay_diff_roundtrip():
+    d = ReplayDiff(fork_at=2, parent_tail=9, child_tail=7,
+                   policy={"voter:rule": {"kind_denylist": ["x"]}})
+    assert not d.diverged
+    d.new_in_replay.append("iX")
+    assert d.diverged and d.to_dict()["new_in_replay"] == ["iX"]

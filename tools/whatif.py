@@ -1,0 +1,117 @@
+"""What-if replay CLI (ISSUE 10): fork a recorded log, replay its suffix
+under a substituted voter policy, and print the decision diff.
+
+The recording is any LogAct log on a durable backend; the replay is pure
+playback (``repro.core.whatif``) — zero live inference calls, zero writes
+to the parent log or the real environment. The demo workload (``--record``)
+is the chaos harness's: a four-step driver/voter/decider/executor run with
+``chaos_work`` intents, so a ``--policy chaos_work`` denylist flips every
+decision and makes the diff easy to eyeball.
+
+Usage::
+
+    # record a demo run onto a fresh log
+    python tools/whatif.py --bus kv:/tmp/run --record
+
+    # replay it under a denylist and diff the outcomes
+    python tools/whatif.py --bus kv:/tmp/run --fork-at 2 \\
+        --policy chaos_work --diff
+
+    # full policy control (JSON {scope: body}) and machine output
+    python tools/whatif.py --bus sqlite:/tmp/run.db --fork-at 2 \\
+        --policy '{"voter:rule": {"kind_denylist": ["chaos_work"]}}' \\
+        --diff --json
+
+``--policy`` sugar: an argument that does not start with ``{`` is read as
+a comma-separated kind denylist for the rule voter. Exits 0 on a clean
+replay, 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.core import chaos                                # noqa: E402
+from repro.core.bus import KvBus, SqliteBus                 # noqa: E402
+from repro.core.whatif import whatif                        # noqa: E402
+
+
+def open_bus(spec: str):
+    """``kv:/path/dir`` or ``sqlite:/path/file.db``."""
+    backend, _, path = spec.partition(":")
+    if not path:
+        raise SystemExit(f"--bus wants backend:path, got {spec!r}")
+    if backend == "kv":
+        return KvBus(path)
+    if backend == "sqlite":
+        return SqliteBus(path)
+    raise SystemExit(f"unknown backend {backend!r} (want kv|sqlite)")
+
+
+def parse_policy(arg: str):
+    if arg.lstrip().startswith("{"):
+        pol = json.loads(arg)
+        if not isinstance(pol, dict):
+            raise SystemExit("--policy JSON must be {scope: body}")
+        return pol
+    kinds = [k.strip() for k in arg.split(",") if k.strip()]
+    return {"voter:rule": {"kind_denylist": kinds}}
+
+
+def record(bus) -> None:
+    env = chaos.fresh_env()
+    chaos._kickoff(bus)
+    chaos.pump(chaos.build_components(bus, env, announce_reboot=False))
+    print(f"recorded {bus.tail()} entries; env: "
+          f"done={sorted(env['done'])} count={env['count']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bus", required=True,
+                    help="log to operate on: kv:/dir or sqlite:/file.db")
+    ap.add_argument("--record", action="store_true",
+                    help="record the demo swarm run onto the bus and exit")
+    ap.add_argument("--fork-at", type=int, default=None,
+                    help="log position to fork at (clamped to the tail)")
+    ap.add_argument("--policy", default=None,
+                    help="substituted policy: JSON {scope: body}, or a "
+                         "comma list of kinds to deny via the rule voter")
+    ap.add_argument("--diff", action="store_true",
+                    help="replay the fork under --policy and print the "
+                         "ReplayDiff")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the diff as JSON instead of the summary")
+    args = ap.parse_args(argv)
+
+    bus = open_bus(args.bus)
+    try:
+        if args.record:
+            record(bus)
+            return 0
+        if not args.diff:
+            ap.print_help()
+            return 2
+        if args.fork_at is None or args.policy is None:
+            raise SystemExit("--diff wants --fork-at and --policy")
+        diff = whatif(bus, args.fork_at, parse_policy(args.policy),
+                      handlers=dict(chaos.CHAOS_HANDLERS),
+                      env_factory=chaos.fresh_env)
+        if args.json:
+            print(json.dumps(diff.to_dict(), indent=2, sort_keys=True))
+        else:
+            print(diff.summary())
+            if diff.child_path:
+                print(f"  counterfactual log kept at {diff.child_path}")
+        return 0
+    finally:
+        bus.close()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
